@@ -1,0 +1,102 @@
+"""Paper Fig. 5 + Fig. 6 — the 11 simulated cores study.
+
+For every simulated device profile, runs the (cost-model-driven) online
+exploration of the euclid kernel and reports speedup + energy-efficiency
+improvement over the SISD and SIMD references, then the IO-vs-OOO
+("lean-vs-fat") comparison on equivalent pairs:
+
+  * ref-on-fat vs ref-on-lean  (hardware gap under static code)
+  * tuned-on-lean vs ref-on-fat (can online tuning replace OOO hardware?)
+"""
+
+from __future__ import annotations
+
+from repro.core import TwoPhaseExplorer
+from repro.core.profiles import ALL_PROFILES, EQUIVALENT_PAIRS
+from repro.kernels.euclid.ops import (
+    euclid_flops, make_euclid_compilette)
+from benchmarks.common import save, table
+
+N, M, D = 4096, 128, 64
+
+
+def ref_points():
+    sisd = dict(block_n=64, block_m=32, block_d=16, unroll=1, vectorize=0,
+                order="nm", scratch=1, lookahead=0)
+    simd = dict(block_n=64, block_m=32, block_d=16, unroll=1, vectorize=1,
+                order="nm", scratch=1, lookahead=0)
+    return sisd, simd
+
+
+def energy(prof, point, t, comp):
+    vect = bool(point["vectorize"])
+    fl = euclid_flops(N, M, D, vect)
+    by = (N * D + M * D + N * M) * 4.0
+    return prof.energy_j(t, fl, by)
+
+
+def run() -> dict:
+    comp = make_euclid_compilette(N, M, D)
+    sisd, simd = ref_points()
+    rows = []
+    best = {}
+    for prof in ALL_PROFILES:
+        t_sisd = comp.simulate(sisd, prof)
+        t_simd = comp.simulate(simd, prof)
+        ex = TwoPhaseExplorer(comp.space)
+        bp, bt = ex.run_to_completion(lambda p: comp.simulate(p, prof))
+        best[prof.name] = (bp, bt)
+        e_simd = energy(prof, simd, t_simd, comp)
+        e_best = energy(prof, bp, bt, comp)
+        rows.append({
+            "core": prof.name,
+            "speedup_vs_SISD": t_sisd / bt,
+            "speedup_vs_SIMD": t_simd / bt,
+            "energy_gain_vs_SIMD": e_simd / e_best,
+            "best_unroll": bp["unroll"],
+            "best_vect": bp["vectorize"],
+            "best_block_d": bp["block_d"],
+        })
+    print(table(rows, ["core", "speedup_vs_SISD", "speedup_vs_SIMD",
+                       "energy_gain_vs_SIMD", "best_unroll", "best_vect",
+                       "best_block_d"],
+                "Fig.5 — online auto-tuning on 11 simulated cores"))
+
+    # ---- Fig. 6: lean (IO) vs fat (OOO) equivalent pairs ---------------
+    pair_rows = []
+    for lean, fat in EQUIVALENT_PAIRS:
+        _, simd_pt = ref_points()
+        t_ref_fat = comp.simulate(simd_pt, fat)
+        t_ref_lean = comp.simulate(simd_pt, lean)
+        bp_lean, t_best_lean = best[lean.name]
+        e_ref_fat = energy(fat, simd_pt, t_ref_fat, comp)
+        e_best_lean = energy(lean, bp_lean, t_best_lean, comp)
+        pair_rows.append({
+            "pair": f"{lean.name}/{fat.name}",
+            "static_gap_ref": t_ref_lean / t_ref_fat,           # >1: lean slower
+            "tuned_lean_gap": t_best_lean / t_ref_fat,
+            "tuned_lean_speedup_vs_fat_ref": t_ref_fat / t_best_lean,
+            "energy_gain_tuned_lean_vs_fat_ref": e_ref_fat / e_best_lean,
+            "area_overhead_fat": fat.area_mm2 / lean.area_mm2 - 1,
+        })
+    import statistics
+    geo = lambda xs: statistics.geometric_mean(xs)
+    summary = {
+        "static_gap_geo": geo([r["static_gap_ref"] for r in pair_rows]),
+        "tuned_gap_geo": geo([r["tuned_lean_gap"] for r in pair_rows]),
+        "tuned_lean_speedup_vs_fat_ref_geo": geo(
+            [r["tuned_lean_speedup_vs_fat_ref"] for r in pair_rows]),
+        "energy_gain_geo": geo(
+            [r["energy_gain_tuned_lean_vs_fat_ref"] for r in pair_rows]),
+    }
+    print(table(pair_rows, list(pair_rows[0].keys()),
+                "Fig.6 — lean(IO) vs fat(OOO) equivalent pairs"))
+    print("summary:", {k: round(v, 3) for k, v in summary.items()})
+    out = {"cores": rows, "pairs": pair_rows, "summary": summary,
+           "best_points": {k: v[0] for k, v in best.items()}}
+    save("fig5_simulated_cores", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,68 @@
+"""Paper Fig. 7 — online auto-tuning speedup vs workload size.
+
+Varies the specialized dimension and the number of points (workload) of
+the CPU-bound kernel on the real platform, measuring the all-overheads
+speedup of online auto-tuning vs the static reference. Small workloads
+shouldn't pay off (crossover); larger ones should.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import Evaluator, OnlineAutotuner, RegenerationPolicy
+from repro.kernels.euclid import ops as euclid
+from benchmarks.common import save, table
+
+
+def one(dim: int, n_points: int, calls: int) -> dict:
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (n_points, dim), jnp.float32)
+    c = jax.random.normal(jax.random.PRNGKey(1), (64, dim), jnp.float32)
+    args = (x, c)
+    ref = jax.jit(euclid.reference_sisd(dim))
+    ref(*args)
+    t0 = time.perf_counter()
+    for _ in range(calls):
+        out = ref(*args)
+    jax.block_until_ready(out)
+    t_ref = time.perf_counter() - t0
+
+    comp = euclid.make_euclid_compilette(n_points, 64, dim)
+    ev = Evaluator(mode="training", groups=1, group_size=3,
+                   make_args=lambda: args)
+    at = OnlineAutotuner(comp, ev, policy=RegenerationPolicy(0.05, 0.5),
+                         specialization={"dim": dim},
+                         reference_fn=ref, wake_every=2)
+    t0 = time.perf_counter()
+    for _ in range(calls):
+        out = at(*args)
+    jax.block_until_ready(out)
+    t_oat = time.perf_counter() - t0
+    return {
+        "dim": dim, "n_points": n_points, "calls": calls,
+        "app_run_s": t_ref, "oat_run_s": t_oat,
+        "speedup": t_ref / t_oat,
+        "explored": at.stats()["n_explored"],
+    }
+
+
+def run(quick: bool = False) -> dict:
+    rows = []
+    grid = [(16, 256, 30), (64, 1024, 60)] if quick else [
+        (8, 256, 30), (32, 256, 60), (32, 1024, 60),
+        (64, 1024, 90), (128, 2048, 90),
+    ]
+    for dim, npts, calls in grid:
+        rows.append(one(dim, npts, calls))
+    print(table(rows, list(rows[0].keys()),
+                "Fig.7 — speedup vs workload (all overheads included)"))
+    save("fig7_varying_workload", rows)
+    return {"rows": rows}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,42 @@
+"""Benchmark driver: one harness per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick]
+
+Real-platform timings (table3/table4/fig7) run the online auto-tuner on
+XLA:CPU; simulated-core studies (fig1/fig5/table5) use the analytical
+device profiles; the roofline harness aggregates dry-run artifacts.
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    quick = "--quick" in sys.argv
+    t0 = time.time()
+    from benchmarks import (fig1_motivational, fig5_simulated_cores,
+                            fig7_varying_workload, roofline,
+                            table3_exec_times, table4_tuning_stats,
+                            table5_param_correlation)
+
+    print("\n### Fig.1 — motivational static exploration\n")
+    fig1_motivational.run()
+    print("\n### Table 3 — real-platform execution times\n")
+    table3_exec_times.run(quick=quick)
+    print("\n### Table 4 — tuning statistics\n")
+    table4_tuning_stats.run(quick=quick)
+    print("\n### Fig.5/6 — 11 simulated cores\n")
+    fig5_simulated_cores.run()
+    print("\n### Fig.7 — varying workload\n")
+    fig7_varying_workload.run(quick=quick)
+    print("\n### Table 5 — parameter/pipeline correlation\n")
+    table5_param_correlation.run()
+    print("\n### Roofline (from dry-run artifacts)\n")
+    roofline.run("single")
+    print(f"\nall benchmarks done in {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

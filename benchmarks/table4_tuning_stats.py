@@ -1,0 +1,81 @@
+"""Paper Table 4 — online auto-tuning statistics.
+
+Explorable versions vs one-run exploration limit, kernels evaluated,
+overhead fraction of application run-time, and duration-to-kernel-life on
+the real platform (XLA:CPU).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import Evaluator, OnlineAutotuner, RegenerationPolicy, TwoPhaseExplorer
+from repro.kernels.euclid import ops as euclid
+from repro.kernels.lintra import ops as lintra
+from benchmarks.common import save, table
+
+N_POINTS, M_CENTERS = 1024, 64
+
+
+def one_run_limit(space) -> int:
+    ex = TwoPhaseExplorer(space)
+    n = 0
+    while True:
+        pt = ex.next_point()
+        if pt is None:
+            break
+        ex.report(pt, 1.0)
+        n += 1
+    return n
+
+
+def run(quick: bool = False) -> dict:
+    rows = []
+    cases = [("euclid", d) for d in ((32,) if quick else (32, 64, 128))]
+    cases += [("lintra", s) for s in ((160,) if quick else (160, 292, 332))]
+    for bench, size in cases:
+        if bench == "euclid":
+            dim = size
+            comp = euclid.make_euclid_compilette(N_POINTS, M_CENTERS, dim)
+            key = jax.random.PRNGKey(0)
+            args = (jax.random.normal(key, (N_POINTS, dim)),
+                    jax.random.normal(key, (M_CENTERS, dim)))
+            spec = {"dim": dim}
+        else:
+            H, W, bands = size, 200, 3
+            comp = lintra.make_lintra_compilette(H, W, bands)
+            key = jax.random.PRNGKey(0)
+            args = (jax.random.normal(key, (H, W, bands)),
+                    jnp.ones(bands), jnp.zeros(bands))
+            spec = {"bands": bands, "width": W}
+        ev = Evaluator(mode="training", groups=1, group_size=3,
+                       make_args=lambda a=args: a)
+        at = OnlineAutotuner(comp, ev, policy=RegenerationPolicy(0.05, 0.15),
+                             specialization=spec, wake_every=2)
+        t0 = time.perf_counter()
+        calls = 800
+        for _ in range(calls):
+            at(*args)
+        wall = time.perf_counter() - t0
+        s = at.stats()
+        rows.append({
+            "bench": bench, "size": size,
+            "explorable": comp.space.n_valid_variants(),
+            "one_run_limit": one_run_limit(comp.space),
+            "kernel_calls": calls,
+            "explored": s["n_explored"],
+            "overhead_%": 100 * s["tuning_spent_s"] / wall,
+            "overhead_ms": 1000 * s["tuning_spent_s"],
+            "swaps": s["swaps"],
+        })
+    print(table(rows, list(rows[0].keys()),
+                "Table 4 — online tuning statistics (real platform)"))
+    save("table4_tuning_stats", rows)
+    return {"rows": rows}
+
+
+if __name__ == "__main__":
+    run()

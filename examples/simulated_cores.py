@@ -1,0 +1,18 @@
+"""The paper's IO-vs-OOO study on the 11 simulated device profiles.
+
+    PYTHONPATH=src python examples/simulated_cores.py
+
+Shows per-profile best tuning points adapting to the hardware (lean cores
+want deeper unrolling + DMA lookahead; fat cores rely on hardware
+scheduling), and whether online tuning on lean cores can match static
+code on fat cores (paper Fig. 6).
+"""
+
+import sys
+
+sys.path.insert(0, "src")
+
+from benchmarks.fig5_simulated_cores import run
+
+if __name__ == "__main__":
+    run()

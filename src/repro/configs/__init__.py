@@ -1,0 +1,31 @@
+"""Architecture registry: --arch <id> resolves through REGISTRY."""
+
+from repro.configs.base import (
+    ALL_SHAPES, DECODE_32K, LONG_500K, PREFILL_32K, TRAIN_4K,
+    ModelConfig, ShapeSpec,
+)
+
+from repro.configs.llama4_scout_17b_a16e import CONFIG as LLAMA4_SCOUT
+from repro.configs.qwen3_moe_30b_a3b import CONFIG as QWEN3_MOE
+from repro.configs.command_r_35b import CONFIG as COMMAND_R
+from repro.configs.deepseek_coder_33b import CONFIG as DEEPSEEK_CODER
+from repro.configs.qwen2_5_32b import CONFIG as QWEN2_5
+from repro.configs.deepseek_7b import CONFIG as DEEPSEEK_7B
+from repro.configs.rwkv6_1_6b import CONFIG as RWKV6
+from repro.configs.qwen2_vl_7b import CONFIG as QWEN2_VL
+from repro.configs.whisper_tiny import CONFIG as WHISPER_TINY
+from repro.configs.hymba_1_5b import CONFIG as HYMBA
+
+REGISTRY: dict[str, ModelConfig] = {
+    c.name: c
+    for c in (
+        LLAMA4_SCOUT, QWEN3_MOE, COMMAND_R, DEEPSEEK_CODER, QWEN2_5,
+        DEEPSEEK_7B, RWKV6, QWEN2_VL, WHISPER_TINY, HYMBA,
+    )
+}
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(REGISTRY)}")
+    return REGISTRY[name]

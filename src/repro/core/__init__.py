@@ -1,0 +1,44 @@
+"""Core contribution: online auto-tuning at the code-generation level.
+
+Public API re-exports.
+"""
+
+from repro.core.autotuner import OnlineAutotuner
+from repro.core.compilette import Compilette, GeneratedKernel
+from repro.core.decision import RegenerationPolicy, TuningAccounts
+from repro.core.evaluator import (
+    Evaluator,
+    Measurement,
+    SimulatedEvaluator,
+    filtered_training_time,
+    mean_real_time,
+)
+from repro.core.explorer import TwoPhaseExplorer
+from repro.core.persistence import TunedRegistry
+from repro.core.profiles import ALL_PROFILES, EQUIVALENT_PAIRS, TPU_V5E, DeviceProfile
+from repro.core.static_tuner import static_autotune
+from repro.core.tuning_space import Param, Point, TuningSpace, product_space
+
+__all__ = [
+    "OnlineAutotuner",
+    "Compilette",
+    "GeneratedKernel",
+    "RegenerationPolicy",
+    "TuningAccounts",
+    "Evaluator",
+    "Measurement",
+    "SimulatedEvaluator",
+    "filtered_training_time",
+    "mean_real_time",
+    "TwoPhaseExplorer",
+    "TunedRegistry",
+    "ALL_PROFILES",
+    "EQUIVALENT_PAIRS",
+    "TPU_V5E",
+    "DeviceProfile",
+    "static_autotune",
+    "Param",
+    "Point",
+    "TuningSpace",
+    "product_space",
+]

@@ -1,0 +1,219 @@
+"""Online auto-tuner (paper Fig. 2 + §3.3–3.4).
+
+At program start a *reference function* is evaluated and becomes the active
+function. The tuning thread periodically wakes up; if the regeneration
+policy grants budget, it asks the two-phase explorer for the next variant,
+generates it with the compilette (run-time machine-code generation),
+evaluates it, and **swaps the active function pointer** when the new score
+is better.
+
+Two scheduling modes:
+
+  * cooperative (default): a wake-up is attempted every ``wake_every``
+    kernel invocations, inline. Deterministic; used by tests and by the
+    training loop's tuning phase.
+  * threaded: a daemon thread wakes every ``wake_period_s`` seconds, like
+    the paper's separate auto-tuning thread. The kernel-call path only
+    reads a function pointer under no lock (pointer swap is atomic in
+    CPython); the tuning thread serializes itself with a lock.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Any, Callable, Sequence
+
+from repro.core.compilette import Compilette, GeneratedKernel
+from repro.core.decision import RegenerationPolicy, TuningAccounts
+from repro.core.evaluator import Evaluator, Measurement
+from repro.core.explorer import TwoPhaseExplorer
+from repro.core.tuning_space import Point
+
+
+@dataclasses.dataclass
+class KernelLife:
+    """Bookkeeping for one active-kernel tenure (gain estimation)."""
+
+    point: Point | None           # None = the reference function
+    score_s: float
+    calls: int = 0
+
+
+class OnlineAutotuner:
+    def __init__(
+        self,
+        compilette: Compilette,
+        evaluator: Evaluator,
+        *,
+        policy: RegenerationPolicy | None = None,
+        specialization: dict[str, Any] | None = None,
+        reference_fn: Callable[..., Any] | None = None,
+        reference_score_s: float | None = None,
+        base_point: Point | None = None,
+        wake_every: int = 16,
+        explorer: TwoPhaseExplorer | None = None,
+    ) -> None:
+        self.compilette = compilette
+        self.evaluator = evaluator
+        self.policy = policy or RegenerationPolicy()
+        self.specialization = dict(specialization or {})
+        self.explorer = explorer or TwoPhaseExplorer(
+            compilette.space, base_point=base_point
+        )
+        self.accounts = TuningAccounts(app_start_s=time.perf_counter())
+        self._lock = threading.Lock()
+        self._wake_every = max(int(wake_every), 1)
+        self._cost_ema: float | None = None   # EMA of gen+eval cost
+        self._lives: list[KernelLife] = []
+        self._thread: threading.Thread | None = None
+        self._stop = threading.Event()
+
+        # --- reference function: initial active function (paper §3) -------
+        # The reference baseline is measured through normal, instrumented
+        # application work (paper §3.3) — it is accounted separately and
+        # does not consume the regeneration budget.
+        t0 = time.perf_counter()
+        if reference_fn is None:
+            ref = self.compilette.generate(
+                self.explorer.base_point, **self.specialization
+            )
+            reference_fn = ref.fn
+            self.accounts.init_spent_s += ref.generation_time_s
+        if reference_score_s is None:
+            m = self.evaluator.evaluate(reference_fn)
+            reference_score_s = m.score_s
+            self.accounts.init_spent_s += m.eval_time_s
+        self.reference_score_s = reference_score_s
+        self._active: Callable[..., Any] = reference_fn
+        self._active_life = KernelLife(point=None, score_s=reference_score_s)
+        self._lives.append(self._active_life)
+        self._init_time_s = time.perf_counter() - t0
+
+    # -------------------------------------------------------------- calling
+    @property
+    def active_fn(self) -> Callable[..., Any]:
+        return self._active
+
+    @property
+    def best_point(self) -> Point | None:
+        return self.explorer.best_point
+
+    def __call__(self, *args: Any) -> Any:
+        out = self._active(*args)
+        self._active_life.calls += 1
+        self.accounts.kernel_calls += 1
+        if (
+            self._thread is None
+            and self.accounts.kernel_calls % self._wake_every == 0
+        ):
+            self.wake()
+        return out
+
+    # ------------------------------------------------------------ gains
+    def _update_gains(self) -> None:
+        gained = 0.0
+        for life in self._lives:
+            gained += life.calls * (self.reference_score_s - life.score_s)
+        self.accounts.gained_s = gained
+
+    # ------------------------------------------------------------ wake-up
+    def wake(self) -> bool:
+        """One wake-up of the tuning thread. Returns True if it swapped."""
+        with self._lock:
+            if self.explorer.finished:
+                return False
+            self._update_gains()
+            now = time.perf_counter()
+            estimate = self._cost_ema if self._cost_ema is not None else 0.0
+            if not self.policy.should_regenerate(self.accounts, now, estimate):
+                return False
+            point = self.explorer.next_point()
+            if point is None:
+                return False
+            t0 = time.perf_counter()
+            try:
+                kern: GeneratedKernel = self.compilette.generate(
+                    point, **self.specialization
+                )
+                measurement: Measurement = self.evaluator.evaluate(kern.fn)
+            except Exception:
+                # Generation failures are holes discovered late: record the
+                # spent time and move on (the paper's "could not generate
+                # code" entries).
+                self.accounts.tuning_spent_s += time.perf_counter() - t0
+                self.explorer.report(point, float("inf"))
+                return False
+            spent = time.perf_counter() - t0
+            self.accounts.tuning_spent_s += spent
+            self.accounts.regenerations += 1
+            self._cost_ema = (
+                spent
+                if self._cost_ema is None
+                else 0.5 * self._cost_ema + 0.5 * spent
+            )
+            is_best = self.explorer.report(point, measurement.score_s)
+            if is_best and measurement.score_s < self._active_life.score_s:
+                self._active = kern.fn
+                self._active_life = KernelLife(
+                    point=dict(point), score_s=measurement.score_s
+                )
+                self._lives.append(self._active_life)
+                self.accounts.swaps += 1
+                return True
+            return False
+
+    def exhaust(self, max_wakes: int = 100000) -> None:
+        """Drive wake-ups ignoring call pacing until budget or space ends."""
+        for _ in range(max_wakes):
+            if self.explorer.finished:
+                break
+            before = self.explorer.state.n_reported
+            self.wake()
+            if self.explorer.state.n_reported == before:
+                break  # budget exhausted for now
+
+    # ------------------------------------------------------------ threaded
+    def start_thread(self, wake_period_s: float = 0.001) -> None:
+        if self._thread is not None:
+            return
+
+        def _loop() -> None:
+            while not self._stop.is_set():
+                self.wake()
+                if self.explorer.finished:
+                    break
+                self._stop.wait(wake_period_s)
+
+        self._thread = threading.Thread(target=_loop, daemon=True)
+        self._thread.start()
+
+    def stop_thread(self) -> None:
+        if self._thread is None:
+            return
+        self._stop.set()
+        self._thread.join(timeout=5.0)
+        self._thread = None
+
+    # ------------------------------------------------------------- reports
+    def stats(self) -> dict[str, Any]:
+        self._update_gains()
+        elapsed = time.perf_counter() - self.accounts.app_start_s
+        return {
+            "kernel_calls": self.accounts.kernel_calls,
+            "regenerations": self.accounts.regenerations,
+            "swaps": self.accounts.swaps,
+            "tuning_spent_s": self.accounts.tuning_spent_s,
+            "gained_s": self.accounts.gained_s,
+            "overhead_frac": (
+                self.accounts.tuning_spent_s / elapsed if elapsed > 0 else 0.0
+            ),
+            "reference_score_s": self.reference_score_s,
+            "active_score_s": self._active_life.score_s,
+            "active_point": self._active_life.point,
+            "best_point": self.explorer.best_point,
+            "best_score_s": self.explorer.best_score,
+            "exploration_finished": self.explorer.finished,
+            "n_explored": self.explorer.state.n_reported,
+        }

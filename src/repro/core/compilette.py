@@ -1,0 +1,91 @@
+"""Compilette: the parametrizable function generator (paper §3.1).
+
+In the paper a compilette is a deGoal generator that emits ARM machine code
+at run time, specializing run-time constants and honouring the auto-tuned
+parameters. Here, a compilette is an object that — given a tuning-space
+point and a set of run-time-constant specializations — *instantiates a
+concrete compiled executable*:
+
+  * on the real backend, a ``jax.jit``-compiled XLA executable (optionally a
+    Pallas kernel with the point's BlockSpec tiling), i.e. actual runtime
+    machine-code generation by XLA — the TPU/CPU analogue of deGoal;
+  * on a simulated device profile, a cost-model evaluation of the same
+    point (the analogue of the paper's gem5 simulations).
+
+The generator function receives ``(point, **specialization)`` and must
+return a callable ``fn(*args)``. Generation cost is measured and reported —
+it is part of the paper's claimed overhead budget.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Mapping
+
+from repro.core.tuning_space import Point, TuningSpace
+
+
+@dataclasses.dataclass
+class GeneratedKernel:
+    """A concrete variant: the paper's 'new version in a code buffer'."""
+
+    point: Point
+    fn: Callable[..., Any]
+    generation_time_s: float
+    specialization: dict[str, Any]
+    meta: dict[str, Any] = dataclasses.field(default_factory=dict)
+
+
+class Compilette:
+    """Parametrizable kernel generator.
+
+    Parameters
+    ----------
+    name:       kernel identity (used for persistence keys).
+    space:      the tuning space (with validity holes).
+    generate:   ``generate(point, **specialization) -> callable``; the
+                callable must accept the kernel's runtime arguments. It
+                should *close over* the specialized run-time constants —
+                this is the deGoal ``#(...)`` inlining analogue (in JAX,
+                trace-time constant folding).
+    warmup:     if given, ``warmup(fn, *args)`` is called once after
+                generation so that measured times exclude one-time compile
+                cost when the evaluator asks for steady-state timing (the
+                XLA compile itself is accounted as generation time).
+    """
+
+    def __init__(
+        self,
+        name: str,
+        space: TuningSpace,
+        generate: Callable[..., Callable[..., Any]],
+        cost_model: Callable[[Point, Mapping[str, Any], Any], float] | None = None,
+    ) -> None:
+        self.name = name
+        self.space = space
+        self._generate = generate
+        # cost_model(point, specialization, profile) -> simulated seconds.
+        self.cost_model = cost_model
+
+    def generate(self, point: Point, **specialization: Any) -> GeneratedKernel:
+        if not self.space.is_valid(point):
+            raise ValueError(
+                f"compilette {self.name!r}: point {point} is a hole in the "
+                "tuning space (invalid variant)"
+            )
+        t0 = time.perf_counter()
+        fn = self._generate(dict(point), **specialization)
+        dt = time.perf_counter() - t0
+        return GeneratedKernel(
+            point=dict(point),
+            fn=fn,
+            generation_time_s=dt,
+            specialization=dict(specialization),
+        )
+
+    def simulate(self, point: Point, profile: Any, **specialization: Any) -> float:
+        """Simulated execution time of ``point`` on a device ``profile``."""
+        if self.cost_model is None:
+            raise ValueError(f"compilette {self.name!r} has no cost model")
+        return self.cost_model(dict(point), dict(specialization), profile)

@@ -1,0 +1,63 @@
+"""Regeneration decision (paper §3.3).
+
+Two factors decide whether the auto-tuning thread may generate+evaluate a
+new variant when it wakes up:
+
+  * **overhead budget** — total tuning time (generation + evaluation) must
+    stay below ``max_overhead_frac`` of the application time elapsed so
+    far. This bounds the cost when tuning never finds anything better
+    (paper: 0.2–4.2 % observed).
+  * **investment factor** — a fraction ``invest_frac`` of the *time gained*
+    by previously found variants may be re-invested into further
+    exploration (paper: e.g. invest 10 % of gained time).
+
+Gain estimation (paper §3.3): the only instrumentation is a counter of
+kernel invocations; gained time = calls_since_swap × (t_reference − t_active)
+accumulated over active-kernel lifetimes. Reference and variants are timed
+once each, so gains are estimates, acceptable per the paper.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass
+class TuningAccounts:
+    """Mutable accounting state shared with the auto-tuner."""
+
+    app_start_s: float = 0.0            # perf_counter at app start
+    tuning_spent_s: float = 0.0         # total generation+evaluation time
+    init_spent_s: float = 0.0           # reference baseline measurement (not
+                                        # budgeted: it is normal app work)
+    gained_s: float = 0.0               # estimated saved time so far
+    kernel_calls: int = 0               # invocation counter (instrumentation)
+    regenerations: int = 0              # variants generated+evaluated
+    swaps: int = 0                      # active-function replacements
+
+
+@dataclasses.dataclass(frozen=True)
+class RegenerationPolicy:
+    """Paper's two-factor budget: overhead limit + investment of gains."""
+
+    max_overhead_frac: float = 0.01     # e.g. 1 % of app runtime
+    invest_frac: float = 0.10           # e.g. reinvest 10 % of gained time
+
+    def budget_s(self, accounts: TuningAccounts, now_s: float) -> float:
+        """Time the tuner is currently allowed to have spent in total."""
+        elapsed = max(now_s - accounts.app_start_s, 0.0)
+        base = self.max_overhead_frac * elapsed
+        investment = self.invest_frac * max(accounts.gained_s, 0.0)
+        return base + investment
+
+    def should_regenerate(
+        self,
+        accounts: TuningAccounts,
+        now_s: float,
+        next_cost_estimate_s: float = 0.0,
+    ) -> bool:
+        """True when generating+evaluating one more variant fits the budget."""
+        return (
+            accounts.tuning_spent_s + next_cost_estimate_s
+            <= self.budget_s(accounts, now_s)
+        )

@@ -1,0 +1,143 @@
+"""Kernel evaluation (paper §3.4).
+
+Two evaluation modes:
+
+  * ``real``      — time the variant on real input data (useful work is
+                    performed during evaluation, measurements are noisier);
+                    score = arithmetic mean of ``runs`` measurements.
+  * ``training``  — time the variant on a training input with warmed
+                    caches; score = the paper's robust filter: **the worst
+                    value among the 3 best values of groups of 5
+                    measurements** — filters oscillations from hardware
+                    (pipeline/cache/counter fluctuations) and software
+                    (interruptions).
+
+Timing uses the host monotonic clock around ``block_until_ready`` when the
+result is a JAX array, so asynchronous dispatch cannot fake speedups.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Sequence
+
+
+def _block(x: Any) -> None:
+    try:
+        import jax
+
+        jax.block_until_ready(x)
+    except Exception:  # non-jax results (plain python) need no sync
+        pass
+
+
+def time_once(fn: Callable[..., Any], args: Sequence[Any]) -> float:
+    t0 = time.perf_counter()
+    out = fn(*args)
+    _block(out)
+    return time.perf_counter() - t0
+
+
+def filtered_training_time(
+    fn: Callable[..., Any],
+    args: Sequence[Any],
+    *,
+    groups: int = 3,
+    group_size: int = 5,
+    warmup: int = 1,
+) -> float:
+    """Paper's filter: worst of the ``groups`` best values of groups of
+    ``group_size`` measurements."""
+    for _ in range(warmup):
+        time_once(fn, args)
+    best_of_groups = []
+    for _ in range(groups):
+        samples = [time_once(fn, args) for _ in range(group_size)]
+        best_of_groups.append(min(samples))
+    return max(best_of_groups)
+
+
+def mean_real_time(
+    fn: Callable[..., Any],
+    args: Sequence[Any],
+    *,
+    runs: int = 5,
+    warmup: int = 1,
+) -> float:
+    for _ in range(warmup):
+        time_once(fn, args)
+    return sum(time_once(fn, args) for _ in range(runs)) / runs
+
+
+@dataclasses.dataclass
+class Measurement:
+    score_s: float          # lower is better (execution time)
+    n_runs: int
+    mode: str               # "real" | "training" | "simulated"
+    eval_time_s: float      # wall time spent evaluating (overhead accounting)
+
+
+class Evaluator:
+    """Scores generated kernels; the auto-tuner compares ``score_s``."""
+
+    def __init__(
+        self,
+        *,
+        mode: str = "training",
+        groups: int = 3,
+        group_size: int = 5,
+        real_runs: int = 5,
+        warmup: int = 1,
+        make_args: Callable[[], Sequence[Any]] | None = None,
+    ) -> None:
+        if mode not in ("real", "training"):
+            raise ValueError(f"unknown evaluation mode {mode!r}")
+        self.mode = mode
+        self.groups = groups
+        self.group_size = group_size
+        self.real_runs = real_runs
+        self.warmup = warmup
+        self.make_args = make_args
+
+    def n_runs(self) -> int:
+        if self.mode == "training":
+            return self.groups * self.group_size + self.warmup
+        return self.real_runs + self.warmup
+
+    def evaluate(self, fn: Callable[..., Any], args: Sequence[Any] | None = None) -> Measurement:
+        if args is None:
+            if self.make_args is None:
+                raise ValueError("no args supplied and no make_args factory")
+            args = self.make_args()
+        t0 = time.perf_counter()
+        if self.mode == "training":
+            score = filtered_training_time(
+                fn, args, groups=self.groups, group_size=self.group_size, warmup=self.warmup
+            )
+        else:
+            score = mean_real_time(fn, args, runs=self.real_runs, warmup=self.warmup)
+        eval_time = time.perf_counter() - t0
+        return Measurement(score_s=score, n_runs=self.n_runs(), mode=self.mode, eval_time_s=eval_time)
+
+
+class SimulatedEvaluator:
+    """Evaluator against an analytical device profile (paper's gem5 analogue).
+
+    ``evaluate`` consults the compilette cost model instead of running code.
+    Evaluation wall-time is ~0; the simulated score drives replacement
+    decisions exactly like a real measurement.
+    """
+
+    def __init__(self, compilette, profile, **specialization: Any) -> None:
+        self.compilette = compilette
+        self.profile = profile
+        self.specialization = specialization
+        self.mode = "simulated"
+
+    def evaluate_point(self, point) -> Measurement:
+        t0 = time.perf_counter()
+        score = self.compilette.simulate(point, self.profile, **self.specialization)
+        return Measurement(
+            score_s=score, n_runs=1, mode="simulated", eval_time_s=time.perf_counter() - t0
+        )

@@ -1,0 +1,131 @@
+"""Two-phase online space exploration (paper §3.3).
+
+Phase 1 explores the parameters that change the *structure* of the code
+(unrolling factors, vector length, vectorization), in order from the least
+switched to the most switched parameter. Within phase 1, variants with **no
+leftover code** are explored first; once exhausted, the condition is
+softened by gradually admitting variants with more leftover work.
+
+Phase 2 freezes the best phase-1 parameters and explores the combinatorial
+choices of the remaining codegen options (instruction scheduling, stack
+minimization, prefetch stride).
+
+The explorer is *pull-based*: the auto-tuner asks for ``next_point()`` only
+when the regeneration policy grants budget, and feeds results back through
+``report(point, score)``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Iterator
+
+from repro.core.tuning_space import Point, TuningSpace
+
+
+def _leftover_rank(space: TuningSpace, point: Point) -> float:
+    """0 = leftover-free; larger = more leftover (explored later)."""
+    res = space.no_leftover(point)
+    if isinstance(res, bool):
+        return 0.0 if res else 1.0
+    # numeric "amount of leftover" → gradual softening order
+    return float(res)
+
+
+@dataclasses.dataclass
+class ExplorerState:
+    phase: int = 1
+    n_proposed: int = 0
+    n_reported: int = 0
+    finished: bool = False
+
+
+class TwoPhaseExplorer:
+    def __init__(self, space: TuningSpace, base_point: Point | None = None) -> None:
+        self.space = space
+        # Initial state of non-phase-1 parameters: pre-profiled defaults.
+        self.base_point: Point = dict(base_point or space.default_point())
+        self.state = ExplorerState()
+        self.best_point: Point | None = None
+        self.best_score: float = float("inf")
+        self._seen: set[tuple] = set()
+        self._pending: Point | None = None
+        self._phase1_iter = self._make_phase1_iter()
+        self._phase2_iter: Iterator[Point] | None = None
+        self.history: list[tuple[Point, float]] = []
+
+    # ------------------------------------------------------------- ordering
+    def _make_phase1_iter(self) -> Iterator[Point]:
+        # Enumerate in least→most switched order, then stable-sort by
+        # leftover rank: leftover-free first, gradually softening.
+        candidates = [
+            p for p in self.space.iter_phase1(self.base_point)
+            if self.space.is_valid(p)
+        ]
+        candidates.sort(key=lambda p: _leftover_rank(self.space, p))
+        return iter(candidates)
+
+    def _make_phase2_iter(self) -> Iterator[Point]:
+        assert self.best_point is not None
+        candidates = [
+            p for p in self.space.iter_phase2(self.best_point)
+            if self.space.is_valid(p)
+        ]
+        return iter(candidates)
+
+    # ------------------------------------------------------------------ api
+    def next_point(self) -> Point | None:
+        """Next variant to generate+evaluate, or None when done."""
+        if self.state.finished:
+            return None
+        it = self._phase1_iter if self.state.phase == 1 else self._phase2_iter
+        assert it is not None
+        while True:
+            try:
+                point = next(it)
+            except StopIteration:
+                if self.state.phase == 1:
+                    if self.best_point is None:
+                        # nothing valid at all
+                        self.state.finished = True
+                        return None
+                    self.state.phase = 2
+                    self._phase2_iter = self._make_phase2_iter()
+                    it = self._phase2_iter
+                    continue
+                self.state.finished = True
+                return None
+            key = self.space.key(point)
+            if key in self._seen:
+                continue
+            self._seen.add(key)
+            self.state.n_proposed += 1
+            self._pending = point
+            return dict(point)
+
+    def report(self, point: Point, score_s: float) -> bool:
+        """Feed a measurement back; returns True if it is the new best."""
+        self.state.n_reported += 1
+        self.history.append((dict(point), score_s))
+        if score_s < self.best_score:
+            self.best_score = score_s
+            self.best_point = dict(point)
+            return True
+        return False
+
+    @property
+    def finished(self) -> bool:
+        return self.state.finished
+
+    def run_to_completion(self, evaluate) -> tuple[Point | None, float]:
+        """Exhaust the exploration with ``evaluate(point) -> seconds``.
+
+        Used by the static tuner and the simulated-platform studies; the
+        online auto-tuner instead paces itself with the regeneration policy.
+        """
+        while True:
+            point = self.next_point()
+            if point is None:
+                break
+            self.report(point, evaluate(point))
+        return self.best_point, self.best_score

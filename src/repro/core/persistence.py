@@ -1,0 +1,73 @@
+"""Persistence of tuned configurations.
+
+Tuned best-points are keyed by (kernel name, specialization, device) and
+stored as JSON. The training loop saves the registry next to checkpoints so
+a restarted (or elastically re-scaled) job resumes with the tuned kernels
+instead of re-exploring — run-time auto-tuning state is part of the fault-
+tolerance story.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Any
+
+from repro.core.tuning_space import Point
+
+
+def _canon(obj: Any) -> str:
+    return json.dumps(obj, sort_keys=True, separators=(",", ":"))
+
+
+class TunedRegistry:
+    def __init__(self) -> None:
+        self._table: dict[str, dict[str, Any]] = {}
+
+    @staticmethod
+    def key(kernel: str, specialization: dict[str, Any], device: str) -> str:
+        return _canon({"k": kernel, "s": specialization, "d": device})
+
+    def put(
+        self,
+        kernel: str,
+        specialization: dict[str, Any],
+        device: str,
+        point: Point,
+        score_s: float,
+    ) -> None:
+        k = self.key(kernel, specialization, device)
+        cur = self._table.get(k)
+        if cur is None or score_s < cur["score_s"]:
+            self._table[k] = {"point": dict(point), "score_s": float(score_s)}
+
+    def get(
+        self, kernel: str, specialization: dict[str, Any], device: str
+    ) -> Point | None:
+        entry = self._table.get(self.key(kernel, specialization, device))
+        return dict(entry["point"]) if entry else None
+
+    def __len__(self) -> int:
+        return len(self._table)
+
+    # ------------------------------------------------------------------ io
+    def save(self, path: str) -> None:
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(self._table, f, indent=1, sort_keys=True)
+            os.replace(tmp, path)  # atomic publish
+        except BaseException:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+            raise
+
+    @classmethod
+    def load(cls, path: str) -> "TunedRegistry":
+        reg = cls()
+        if os.path.exists(path):
+            with open(path) as f:
+                reg._table = json.load(f)
+        return reg

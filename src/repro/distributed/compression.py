@@ -1,0 +1,53 @@
+"""Gradient compression: int8 quantization with error feedback (EF-SGD).
+
+On a real cluster the quantized tensors are what crosses the DP axis
+(quantize → all-reduce int8/fp32-scale → dequantize), cutting gradient
+all-reduce bytes 4×. The numerics (quantize/dequantize + error feedback)
+are exactly what we implement and test here; the collective hookup is a
+sharding annotation away (grads are already FSDP-sharded, so GSPMD emits
+reduce-scatters over the quantized representation when enabled inside
+shard_map — see DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(g: jax.Array) -> tuple[jax.Array, jax.Array]:
+    scale = jnp.max(jnp.abs(g)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_tree(grads: Any) -> Any:
+    return jax.tree.map(quantize_int8, grads)
+
+
+class ErrorFeedback:
+    """Residual accumulator: e ← g + e − deq(quant(g + e))."""
+
+    def init(self, params: Any) -> Any:
+        return jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    def apply(self, grads: Any, errors: Any) -> tuple[Any, Any]:
+        def one(g, e):
+            corrected = g.astype(jnp.float32) + e
+            q, scale = quantize_int8(corrected)
+            deq = dequantize_int8(q, scale)
+            return deq, corrected - deq
+
+        out = jax.tree.map(one, grads, errors)
+        new_g = jax.tree.map(lambda t: t[0], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_e = jax.tree.map(lambda t: t[1], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        return new_g, new_e

@@ -1,0 +1,160 @@
+"""Roofline-term derivation from compiled dry-run artifacts.
+
+Three terms per (arch × shape × mesh), all in seconds:
+
+  compute    = HLO_FLOPs_per_device / peak_FLOPs          (197 TF bf16/chip)
+  memory     = HLO_bytes_per_device / HBM_bw              (819 GB/s/chip)
+  collective = ring-model link bytes per device / link_bw (50 GB/s/link)
+
+``cost_analysis()`` of the SPMD-partitioned module is already per-device.
+Collective bytes are parsed from the optimized HLO: for each collective op
+we take the output shape and apply a ring-traffic model
+(all-reduce ≈ 2×N, all-gather/all-to-all/permute ≈ N, reduce-scatter ≈ N×g)
+— equivalent to summing operand sizes, which post-optimization HLO no
+longer prints inline.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any
+
+PEAK_FLOPS = 197e12       # bf16 per chip
+HBM_BW = 819e9            # bytes/s per chip
+LINK_BW = 50e9            # bytes/s per ICI link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?:\()?\s*(?P<shapes>[a-z0-9]+\[[0-9,]*\][^ ]*(?:,\s*[a-z0-9]+\[[0-9,]*\][^ )]*)*)\s*\)?\s*"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute|ragged-all-to-all)"
+    r"(?:-start)?\("
+)
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=(\{\{[^}]*\}[^,]*\}|\[[0-9,]+\]<=\[[0-9]+\])")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _group_size(line: str, default: int = 2) -> int:
+    m = _GROUPS_RE.search(line)
+    if not m:
+        return default
+    g = m.group(1)
+    if g.startswith("{{"):
+        first = g[2:].split("}")[0]
+        return max(len([x for x in first.split(",") if x.strip() != ""]), 1)
+    # iota form: [2,16]<=[32] → groups shaped (2, 16): size = last dim
+    dims = g.split("<=")[0].strip("[]").split(",")
+    return int(dims[-1])
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    per_op_bytes: dict[str, float]
+    link_bytes: float          # ring-model bytes crossing one chip's links
+    n_ops: dict[str, int]
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    per_op: dict[str, float] = {}
+    n_ops: dict[str, int] = {}
+    link_bytes = 0.0
+    for line in hlo_text.splitlines():
+        if "-done" in line:
+            continue  # async pair: count the -start only
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        op = m.group("op")
+        out_bytes = sum(
+            _shape_bytes(d, dims) for d, dims in _SHAPE_RE.findall(m.group("shapes"))
+        )
+        g = _group_size(line)
+        if op == "all-reduce":
+            traffic = 2.0 * out_bytes * (g - 1) / g
+        elif op == "reduce-scatter":
+            traffic = out_bytes * (g - 1)          # input = out×g
+        else:  # all-gather / all-to-all / collective-permute
+            traffic = out_bytes * (g - 1) / g
+        per_op[op] = per_op.get(op, 0.0) + traffic
+        n_ops[op] = n_ops.get(op, 0) + 1
+        link_bytes += traffic
+    return CollectiveStats(per_op_bytes=per_op, link_bytes=link_bytes, n_ops=n_ops)
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float               # per device
+    bytes_hbm: float           # per device
+    bytes_link: float          # per device
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bound: str
+    model_flops: float         # analytic useful flops (global)
+    n_chips: int
+    useful_ratio: float        # MODEL_FLOPS / (HLO_FLOPs × chips)
+    roofline_frac: float       # ideal compute time / dominant term
+
+    def row(self) -> dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
+def roofline_from(
+    cost: dict[str, float],
+    hlo_text: str,
+    *,
+    n_chips: int,
+    model_flops: float,
+    peak: float = PEAK_FLOPS,
+    hbm: float = HBM_BW,
+    link: float = LINK_BW,
+) -> Roofline:
+    """Derive the three terms from the compiled HLO.
+
+    ``xla cost_analysis`` counts while bodies once, so FLOPs/bytes come
+    from the trip-count-aware HLO walker (repro.distributed.hlo_analysis);
+    the raw cost dict is kept for cross-checking only.
+    """
+    from repro.distributed.hlo_analysis import analyze_hlo
+
+    t = analyze_hlo(hlo_text)
+    flops = t.flops or float(cost.get("flops", 0.0))
+    bytes_hbm = t.bytes or float(cost.get("bytes accessed", 0.0))
+    coll = CollectiveStats(per_op_bytes=t.coll_per_op,
+                           link_bytes=t.coll_bytes, n_ops={})
+    compute_s = flops / peak
+    memory_s = bytes_hbm / hbm
+    collective_s = coll.link_bytes / link
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    bound = max(terms, key=terms.get)
+    total_hlo_flops = flops * n_chips
+    useful = model_flops / total_hlo_flops if total_hlo_flops else 0.0
+    ideal_s = model_flops / (n_chips * peak)
+    dominant = max(terms.values())
+    return Roofline(
+        flops=flops,
+        bytes_hbm=bytes_hbm,
+        bytes_link=coll.link_bytes,
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=collective_s,
+        bound=bound,
+        model_flops=model_flops,
+        n_chips=n_chips,
+        useful_ratio=useful,
+        roofline_frac=ideal_s / dominant if dominant > 0 else 0.0,
+    )

@@ -1,0 +1,40 @@
+"""Pure-jnp oracle for attention (naive full-softmax, GQA-aware)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(
+    q: jax.Array,      # (B, Tq, H, Dh)
+    k: jax.Array,      # (B, Tkv, Hk, Dh)
+    v: jax.Array,      # (B, Tkv, Hk, Dh)
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+    q_offset: int = 0,
+    window: int | None = None,
+) -> jax.Array:
+    B, Tq, H, Dh = q.shape
+    _, Tkv, Hk, _ = k.shape
+    G = H // Hk
+    scale = float(scale if scale is not None else Dh ** -0.5)
+
+    qg = q.reshape(B, Tq, Hk, G, Dh).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, kf) * scale
+    q_pos = q_offset + jnp.arange(Tq)[:, None]
+    k_pos = jnp.arange(Tkv)[None, :]
+    mask = jnp.ones((Tq, Tkv), dtype=bool)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, vf)
+    return o.reshape(B, Tq, H, Dh).astype(q.dtype)

@@ -1,0 +1,239 @@
+"""Euclidean-distance kernel: compilettes, wrappers, cost model.
+
+Two compilette backends share one tuning space:
+
+  * ``jnp``    — generates a *CPU/XLA program variant* per tuning point
+                 (chunking, unrolled accumulators, MXU-vs-VPU formulation,
+                 loop order). This is the container's **real platform**:
+                 XLA:CPU emits genuinely different machine code per point
+                 and the variants have measurably different run times —
+                 the deGoal-on-ARM role.
+  * ``pallas`` — the TPU kernel (interpret-mode validated on CPU).
+
+The analytical cost model drives the 11 simulated device profiles.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.compilette import Compilette
+from repro.core.profiles import TPU_V5E, DeviceProfile
+from repro.core.tuning_space import Param, Point, TuningSpace
+from repro.kernels.euclid.euclid import euclid_pallas
+from repro.kernels.euclid.ref import euclid_ref
+
+DEFAULT_POINT: Point = {
+    "block_n": 128, "block_m": 64, "block_d": 32, "unroll": 1,
+    "vectorize": 1, "order": "nm", "scratch": 1, "lookahead": 1,
+}
+
+
+def make_space(
+    N: int, M: int, D: int,
+    *,
+    vmem_kb: int = TPU_V5E.vmem_kb,
+) -> TuningSpace:
+    params = (
+        Param("block_n", (64, 128, 256), phase=1, switch_rank=0),   # coldUF
+        Param("block_m", (32, 64, 128), phase=1, switch_rank=1),
+        Param("block_d", (16, 32, 64, 128), phase=1, switch_rank=2),  # vectLen
+        Param("unroll", (1, 2, 4), phase=1, switch_rank=3),          # hotUF
+        Param("vectorize", (1, 0), phase=1, switch_rank=4),          # VE
+        Param("order", ("nm", "mn"), phase=2),                       # IS
+        Param("scratch", (1, 0), phase=2),                           # SM
+        Param("lookahead", (0, 1, 2), phase=2),                      # pld
+    )
+
+    def validator(p: Point) -> bool:
+        bd = min(p["block_d"], D)
+        if bd % p["unroll"] != 0:
+            return False
+        if p["block_d"] > D:
+            return False           # over-tiling the specialized dimension
+        if p["block_n"] > N or p["block_m"] > M:
+            return False
+        words = p["block_n"] * bd + p["block_m"] * bd + p["block_n"] * p["block_m"]
+        if p["scratch"]:
+            words += p["block_n"] * p["block_m"]
+        if not p["vectorize"]:
+            # VPU path materializes the (bn, bm, sub) diff cube in VMEM —
+            # the register-pressure hole of the paper's SISD variants.
+            words += p["block_n"] * p["block_m"] * (bd // p["unroll"])
+        return words * 4 <= vmem_kb * 1024
+
+    def no_leftover(p: Point) -> float:
+        waste = 1.0
+        for dim, blk in ((N, p["block_n"]), (M, p["block_m"]), (D, min(p["block_d"], D))):
+            n = math.ceil(dim / blk)
+            waste *= (n * blk) / dim
+        return waste - 1.0
+
+    return TuningSpace(params=params, validator=validator, no_leftover=no_leftover)
+
+
+# ------------------------------------------------------------- jnp variants
+def generate_jnp_variant(point: Point, *, dim: int):
+    """Build a specialized XLA:CPU program for this tuning point.
+
+    ``dim`` is the run-time constant being specialized (the paper
+    specializes the Streamcluster point dimension into the compilette).
+    """
+    bd = min(point["block_d"], dim)
+    unroll = point["unroll"]
+    vect = bool(point["vectorize"])
+    order = point.get("order", "nm")
+    scratch = bool(point.get("scratch", 1))
+    n_chunks = math.ceil(dim / bd)
+
+    def chunk_dist(xs, cs):
+        if vect:
+            xx = jnp.sum(xs * xs, axis=-1, keepdims=True)
+            cc = jnp.sum(cs * cs, axis=-1, keepdims=True).T
+            return xx + cc - 2.0 * jnp.dot(xs, cs.T, preferred_element_type=jnp.float32)
+        diff = xs[:, None, :] - cs[None, :, :]
+        return jnp.sum(diff * diff, axis=-1)
+
+    @jax.jit
+    def fn(x, c):
+        x = x.astype(jnp.float32)
+        c = c.astype(jnp.float32)
+        if order == "mn":
+            x, c = c, x  # compute transposed, swap back at the end
+        # hotUF: `unroll` independent accumulator chains over d-chunks.
+        accs = [None] * unroll
+        for i in range(n_chunks):
+            sl = slice(i * bd, min((i + 1) * bd, dim))
+            part = chunk_dist(x[:, sl], c[:, sl])
+            j = i % unroll
+            accs[j] = part if accs[j] is None else accs[j] + part
+        live = [a for a in accs if a is not None]
+        if scratch:
+            out = jnp.sum(jnp.stack(live), axis=0) if len(live) > 1 else live[0]
+        else:
+            out = live[0]
+            for a in live[1:]:
+                out = out + a
+        return out.T if order == "mn" else out
+
+    return fn
+
+
+# --------------------------------------------------------------------- cost
+def euclid_cost_model(
+    point: Point, spec: dict[str, Any], profile: DeviceProfile
+) -> float:
+    N, M, D = spec["N"], spec["M"], spec["D"]
+    bn, bm = point["block_n"], point["block_m"]
+    bd = min(point["block_d"], D)
+    unroll, vect = point["unroll"], bool(point["vectorize"])
+    scratch, lookahead = point["scratch"], point["lookahead"]
+
+    words = bn * bd + bm * bd + bn * bm + (bn * bm if scratch else 0)
+    if not vect:
+        words += bn * bm * (bd // unroll)
+    if words * 4 > profile.vmem_kb * 1024:
+        return float("inf")
+
+    n_n, n_m, n_d = math.ceil(N / bn), math.ceil(M / bm), math.ceil(D / bd)
+    if vect:
+        flops = 2.0 * N * M * D + 2.0 * (N + M) * D
+        if profile.overlap:
+            eff_u = max(0.88, unroll / (unroll + 0.35))
+        else:
+            eff_u = unroll / (unroll + 1.2)
+        eff_k = bd / (bd + 64.0)
+        compute_s = flops / (profile.peak_flops * eff_u * eff_k)
+    else:
+        flops = 3.0 * N * M * D
+        # VPU path: lean single-VPU cores stall badly without unrolling
+        # (the paper's non-pipelined VFP story on the Cortex-A8).
+        if profile.overlap:
+            eff_u = max(0.80, unroll / (unroll + 0.5))
+        else:
+            eff_u = unroll / (unroll + 2.0)
+        compute_s = flops / (profile.vpu_gflops * 1e9 * eff_u)
+
+    bytes_total = (N * D * n_m + M * D * n_n + N * M) * 4.0
+    mem_s = bytes_total / (profile.hbm_gbps * 1e9)
+
+    steps = n_n * n_m * n_d
+    good_order = (point["order"] == "nm") == (N >= M)
+    overhead_s = steps * profile.grid_step_overhead_ns * (0.8 if good_order else 1.0) * 1e-9
+
+    t = profile.exec_time_s(compute_s, mem_s, overhead_s)
+    if not profile.overlap and lookahead > 0:
+        t -= min(compute_s, mem_s) * min(0.35 * lookahead, 0.7)
+    return t
+
+
+def euclid_flops(N: int, M: int, D: int, vectorize: bool = True) -> float:
+    return (2.0 if vectorize else 3.0) * N * M * D
+
+
+# --------------------------------------------------------------- compilette
+def make_euclid_compilette(
+    N: int, M: int, D: int,
+    *,
+    backend: str = "jnp",
+    interpret: bool = True,
+    vmem_kb: int = TPU_V5E.vmem_kb,
+) -> Compilette:
+    space = make_space(N, M, D, vmem_kb=vmem_kb)
+
+    def generate(point: Point, **spec: Any):
+        dim = spec.get("dim", D)
+        if backend == "jnp":
+            return generate_jnp_variant(point, dim=dim)
+        elif backend == "pallas":
+            @jax.jit
+            def fn(x, c):
+                return euclid_pallas(x, c, point, interpret=interpret)
+            return fn
+        raise ValueError(f"unknown backend {backend!r}")
+
+    def cost_model(point: Point, spec: dict[str, Any], profile: DeviceProfile) -> float:
+        full = {"N": N, "M": M, "D": D}
+        full.update(spec)
+        return euclid_cost_model(point, full, profile)
+
+    return Compilette("euclid", space, generate, cost_model=cost_model)
+
+
+# ------------------------------------------------------------- references
+def reference_sisd(dim: int):
+    """The 'compiler default' scalar reference (paper's PARSEC C code)."""
+    @jax.jit
+    def fn(x, c):
+        return euclid_ref(x, c)
+    return fn
+
+
+def reference_simd(dim: int):
+    """Hand-vectorized reference (paper's PARVEC NEON code analogue)."""
+    @jax.jit
+    def fn(x, c):
+        x = x.astype(jnp.float32)
+        c = c.astype(jnp.float32)
+        xx = jnp.sum(x * x, axis=-1, keepdims=True)
+        cc = jnp.sum(c * c, axis=-1, keepdims=True).T
+        return xx + cc - 2.0 * jnp.dot(x, c.T, preferred_element_type=jnp.float32)
+    return fn
+
+
+__all__ = [
+    "DEFAULT_POINT",
+    "make_space",
+    "make_euclid_compilette",
+    "generate_jnp_variant",
+    "euclid_cost_model",
+    "euclid_flops",
+    "euclid_ref",
+    "euclid_pallas",
+    "reference_sisd",
+    "reference_simd",
+]

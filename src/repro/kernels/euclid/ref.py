@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the euclidean-distance kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def euclid_ref(x: jax.Array, c: jax.Array) -> jax.Array:
+    """dist[n, m] = sum_d (x[n,d] - c[m,d])^2, computed naively in fp32."""
+    x = x.astype(jnp.float32)
+    c = c.astype(jnp.float32)
+    diff = x[:, None, :] - c[None, :, :]
+    return jnp.sum(diff * diff, axis=-1)

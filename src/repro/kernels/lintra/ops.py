@@ -1,0 +1,196 @@
+"""Lintra kernel: compilettes, wrappers, cost model (memory-bound study).
+
+Specialized run-time constants (paper §4.3): the number of bands and the
+image width. The jnp backend generates real XLA:CPU program variants; the
+pallas backend targets TPU; the cost model serves the simulated profiles.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.compilette import Compilette
+from repro.core.profiles import TPU_V5E, DeviceProfile
+from repro.core.tuning_space import Param, Point, TuningSpace
+from repro.kernels.lintra.lintra import lintra_pallas
+from repro.kernels.lintra.ref import lintra_ref, lintra_ref_folded
+
+DEFAULT_POINT: Point = {
+    "block_h": 64, "block_w": 256, "unroll": 1,
+    "vectorize": 1, "order": "hw", "scratch": 1, "lookahead": 1,
+}
+
+
+def make_space(
+    H: int, W: int, bands: int,
+    *,
+    vmem_kb: int = TPU_V5E.vmem_kb,
+) -> TuningSpace:
+    WB = W * bands
+    params = (
+        Param("block_h", (8, 32, 64, 128), phase=1, switch_rank=0),     # coldUF
+        Param("block_w", (128, 256, 512, 1024), phase=1, switch_rank=1),  # vectLen
+        Param("unroll", (1, 2, 4), phase=1, switch_rank=2),             # hotUF
+        Param("vectorize", (1, 0), phase=1, switch_rank=3),             # VE
+        Param("order", ("hw", "wh"), phase=2),                          # IS
+        Param("scratch", (1, 0), phase=2),                              # SM
+        Param("lookahead", (0, 1, 2), phase=2),                         # pld
+    )
+
+    def validator(p: Point) -> bool:
+        if p["block_h"] % p["unroll"] != 0:
+            return False
+        if p["block_h"] > H or min(p["block_w"], WB) > WB:
+            return False
+        words = 2 * p["block_h"] * min(p["block_w"], WB) + 2 * min(p["block_w"], WB)
+        return words * 4 <= vmem_kb * 1024
+
+    def no_leftover(p: Point) -> float:
+        waste = 1.0
+        for dim, blk in ((H, p["block_h"]), (WB, min(p["block_w"], WB))):
+            n = math.ceil(dim / blk)
+            waste *= (n * blk) / dim
+        return waste - 1.0
+
+    return TuningSpace(params=params, validator=validator, no_leftover=no_leftover)
+
+
+# ------------------------------------------------------------- jnp variants
+def generate_jnp_variant(point: Point, *, bands: int, width: int):
+    """Specialized XLA:CPU variant: bands and width are trace-time consts.
+
+    The paper's key observation for this kernel: the reference C code
+    *reloads the run-time-constant a/b vectors every loop iteration*, while
+    the compilette inlines them — most of the observed speedup. We mirror
+    that: variants close over `a`/`b` handling strategy.
+    """
+    bh = point["block_h"]
+    unroll = point["unroll"]
+    vect = bool(point["vectorize"])
+    n_strips = unroll
+
+    @jax.jit
+    def fn(x, a, b):
+        # x: (H, W, bands) fp32
+        H = x.shape[0]
+        if vect:
+            xs = x.reshape(H, width * bands)
+            af = jnp.tile(a, width)
+            bf = jnp.tile(b, width)
+            # hotUF: independent row strips
+            strip = max(H // n_strips, 1)
+            outs = []
+            for u in range(n_strips):
+                lo = u * strip
+                hi = H if u == n_strips - 1 else (u + 1) * strip
+                outs.append(xs[lo:hi] * af[None, :] + bf[None, :])
+            y = jnp.concatenate(outs, axis=0) if n_strips > 1 else outs[0]
+            return y.reshape(H, width, bands)
+        # SISD path: per-band loop (the paper's scalar code shape)
+        cols = [x[:, :, k] * a[k] + b[k] for k in range(bands)]
+        return jnp.stack(cols, axis=-1)
+
+    return fn
+
+
+# --------------------------------------------------------------------- cost
+def lintra_cost_model(
+    point: Point, spec: dict[str, Any], profile: DeviceProfile
+) -> float:
+    H, W, bands = spec["H"], spec["W"], spec["bands"]
+    WB = W * bands
+    bh, bw = point["block_h"], min(point["block_w"], WB)
+    unroll, vect = point["unroll"], bool(point["vectorize"])
+    lookahead = point["lookahead"]
+
+    words = 2 * bh * bw + 2 * bw
+    if words * 4 > profile.vmem_kb * 1024:
+        return float("inf")
+
+    flops = 2.0 * H * WB
+    if vect:
+        eff_u = max(0.85, unroll / (unroll + 0.3)) if profile.overlap else unroll / (unroll + 1.0)
+        compute_s = flops / (profile.vpu_gflops * 1e9 * eff_u)
+    else:
+        # scalar per-band path: an order of magnitude off the vector pipe
+        compute_s = flops / (profile.vpu_gflops * 1e9 * 0.12)
+
+    bytes_total = 2.0 * H * WB * 4.0   # read once + write once: streaming
+    mem_s = bytes_total / (profile.hbm_gbps * 1e9)
+
+    steps = math.ceil(H / bh) * math.ceil(WB / bw)
+    good_order = (point["order"] == "hw") == (H >= WB / 128)
+    overhead_s = steps * profile.grid_step_overhead_ns * (0.8 if good_order else 1.0) * 1e-9
+
+    t = profile.exec_time_s(compute_s, mem_s, overhead_s)
+    if not profile.overlap and lookahead > 0:
+        t -= min(compute_s, mem_s) * min(0.35 * lookahead, 0.7)
+    return t
+
+
+# --------------------------------------------------------------- compilette
+def make_lintra_compilette(
+    H: int, W: int, bands: int,
+    *,
+    backend: str = "jnp",
+    interpret: bool = True,
+    vmem_kb: int = TPU_V5E.vmem_kb,
+) -> Compilette:
+    space = make_space(H, W, bands, vmem_kb=vmem_kb)
+
+    def generate(point: Point, **spec: Any):
+        b_ = spec.get("bands", bands)
+        w_ = spec.get("width", W)
+        if backend == "jnp":
+            return generate_jnp_variant(point, bands=b_, width=w_)
+        elif backend == "pallas":
+            @jax.jit
+            def fn(x, ab):
+                return lintra_pallas(x, ab, point, interpret=interpret)
+            return fn
+        raise ValueError(f"unknown backend {backend!r}")
+
+    def cost_model(point: Point, spec: dict[str, Any], profile: DeviceProfile) -> float:
+        full = {"H": H, "W": W, "bands": bands}
+        full.update(spec)
+        return lintra_cost_model(point, full, profile)
+
+    return Compilette("lintra", space, generate, cost_model=cost_model)
+
+
+def reference_sisd(bands: int, width: int):
+    """Reference that RELOADS a/b per row (the paper's C-code behaviour)."""
+    @jax.jit
+    def fn(x, a, b):
+        rows = []
+        for k in range(bands):
+            # reload (re-broadcast) constants per band, scalar-ish path
+            rows.append(x[:, :, k] * a[k] + b[k])
+        return jnp.stack(rows, axis=-1)
+    return fn
+
+
+def reference_simd(bands: int, width: int):
+    """Hand-vectorized reference (single fused broadcast op)."""
+    @jax.jit
+    def fn(x, a, b):
+        return lintra_ref(x, a, b)
+    return fn
+
+
+__all__ = [
+    "DEFAULT_POINT",
+    "make_space",
+    "make_lintra_compilette",
+    "generate_jnp_variant",
+    "lintra_cost_model",
+    "lintra_ref",
+    "lintra_ref_folded",
+    "lintra_pallas",
+    "reference_sisd",
+    "reference_simd",
+]

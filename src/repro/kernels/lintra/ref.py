@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the VIPS linear-transform kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lintra_ref(x: jax.Array, a: jax.Array, b: jax.Array) -> jax.Array:
+    """y[h, w, band] = a[band] * x[h, w, band] + b[band].
+
+    ``x`` is (H, W, bands); ``a``/``b`` are (bands,).
+    """
+    return x * a[None, None, :] + b[None, None, :]
+
+
+def lintra_ref_folded(x: jax.Array, ab: jax.Array) -> jax.Array:
+    """Folded layout oracle: x (H, W*bands), ab (2, W*bands)."""
+    return x * ab[0][None, :] + ab[1][None, :]

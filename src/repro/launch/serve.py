@@ -1,0 +1,41 @@
+"""Serving launcher CLI.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-1.6b --reduced
+"""
+
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--tokens", type=int, default=32)
+    args = ap.parse_args()
+
+    import jax
+
+    from repro.configs import get_config
+    from repro.runtime.serve_loop import ServeConfig, generate
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    batch = {"tokens": jax.random.randint(
+        jax.random.PRNGKey(0), (args.batch, args.prompt_len), 0, cfg.vocab)}
+    if cfg.family == "encdec":
+        batch["audio_embeds"] = jax.random.normal(
+            jax.random.PRNGKey(1),
+            (args.batch, cfg.enc_frames, cfg.d_model)) * 0.05
+    if cfg.family == "vlm":
+        batch["vision"] = jax.random.normal(
+            jax.random.PRNGKey(1), (args.batch, 16, cfg.d_model)) * 0.05
+    out = generate(cfg, batch, ServeConfig(max_new_tokens=args.tokens))
+    print(f"{out['decode_tokens_per_s']:.1f} tok/s, "
+          f"prefill {out['prefill_s']*1e3:.0f} ms")
+
+
+if __name__ == "__main__":
+    main()

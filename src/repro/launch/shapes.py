@@ -1,0 +1,343 @@
+"""Cell construction: (arch × shape × mesh) → jit-able step + abstract args.
+
+``input_specs`` returns ShapeDtypeStruct stand-ins for every model input —
+weak-type-correct, shardable, no device allocation. ``build_cell`` bundles
+the step function, abstract arguments and NamedShardings for the dry-run
+and launcher.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.distributed import sharding as shlib
+from repro.models.model import build_model
+from repro.models.params import abstract_tree, spec_tree
+from repro.optim.adamw import AdamW, OptimizerConfig
+
+KV_AXES = ("layers", "batch", "kv_seq", "kv", "kv_dh")
+
+
+def cache_axes(cfg: ModelConfig) -> tuple[tuple, ...]:
+    if cfg.family in ("dense", "moe", "vlm"):
+        return (KV_AXES, KV_AXES)
+    if cfg.family == "rwkv":
+        return (
+            ("layers", "batch", "heads", None, None),
+            ("layers", "batch", None),
+            ("layers", "batch", None),
+        )
+    if cfg.family == "hybrid":
+        return (
+            KV_AXES, KV_AXES,
+            ("layers", "batch", None, "heads"),
+            ("layers", "batch", "heads", None),
+        )
+    if cfg.family == "encdec":
+        return (KV_AXES, KV_AXES, KV_AXES, KV_AXES)
+    raise ValueError(cfg.family)
+
+
+def skip_reason(cfg: ModelConfig, shape: ShapeSpec) -> str | None:
+    """Cells that are skipped by design (recorded in EXPERIMENTS.md)."""
+    if shape.name == "long_500k" and not cfg.supports_long_decode:
+        return ("full-attention arch: 500k dense-KV decode unsupported "
+                "without an algorithmic change (see DESIGN.md §6)")
+    return None
+
+
+# --------------------------------------------------------------- input specs
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict[str, jax.ShapeDtypeStruct]:
+    """Abstract model inputs for one cell (the data batch only)."""
+    B, T = shape.global_batch, shape.seq_len
+    tok = lambda b, t: jax.ShapeDtypeStruct((b, t), jnp.int32)
+    emb = cfg.compute_dtype
+    if shape.kind in ("train", "prefill"):
+        if cfg.family == "encdec":
+            return {
+                "audio_embeds": jax.ShapeDtypeStruct(
+                    (B, cfg.enc_frames, cfg.d_model), emb),
+                "tokens": tok(B, T),
+                "labels": tok(B, T),
+            }
+        if cfg.family == "vlm":
+            Pv = cfg.vision_patches
+            return {
+                "vision": jax.ShapeDtypeStruct((B, Pv, cfg.d_model), emb),
+                "tokens": tok(B, T - Pv),
+                "labels": tok(B, T - Pv),
+            }
+        return {"tokens": tok(B, T), "labels": tok(B, T)}
+    # decode: one new token against a cache of length T
+    return {"tokens": tok(B, 1)}
+
+
+def batch_axes(cfg: ModelConfig, shape: ShapeSpec) -> dict[str, tuple]:
+    ax: dict[str, tuple] = {}
+    for name in input_specs(cfg, shape):
+        if name in ("audio_embeds", "vision"):
+            ax[name] = ("batch", None, None)
+        else:
+            ax[name] = ("batch", None)
+    return ax
+
+
+# ------------------------------------------------------------- MODEL_FLOPS
+def model_flops(cfg: ModelConfig, shape: ShapeSpec) -> float:
+    """Analytic useful FLOPs for the cell (global, fwd+bwd for train).
+
+    6·N·D (dense) / 6·N_active·D (MoE) plus the attention term
+    12·L·T·d_attn per token (causal halves it), which matters at 32k+.
+    """
+    n_active = cfg.n_active_params()
+    B, T = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        tokens = B * T
+        base = 6.0 * n_active * tokens
+        attn = 0.0
+        if cfg.family not in ("rwkv",):
+            d_attn = cfg.n_heads * cfg.d_head
+            layers = cfg.n_layers
+            eff_ctx = min(cfg.window, T) if cfg.window else T
+            attn = 12.0 * layers * d_attn * eff_ctx * 0.5 * tokens
+        return base + attn
+    if shape.kind == "prefill":
+        tokens = B * T
+        base = 2.0 * n_active * tokens
+        attn = 0.0
+        if cfg.family not in ("rwkv",):
+            d_attn = cfg.n_heads * cfg.d_head
+            eff_ctx = min(cfg.window, T) if cfg.window else T
+            attn = 4.0 * cfg.n_layers * d_attn * eff_ctx * 0.5 * tokens
+        return base + attn
+    # decode: one token per sequence
+    tokens = B
+    base = 2.0 * n_active * tokens
+    attn = 0.0
+    if cfg.family not in ("rwkv",):
+        d_kv = 2 * cfg.n_kv_heads * cfg.d_head
+        eff_ctx = min(cfg.window, T) if cfg.window else T
+        attn = 2.0 * cfg.n_layers * cfg.n_heads * cfg.d_head * eff_ctx * 2.0 * tokens
+        del d_kv
+    if cfg.family in ("rwkv", "hybrid"):
+        # state update ~ H·C² (rwkv) or di·state (ssm) per layer per token
+        attn += 4.0 * cfg.n_layers * cfg.d_model * max(
+            cfg.rwkv_head_size, cfg.ssm_state) * tokens
+    return base + attn
+
+
+# ------------------------------------------------------------------- cells
+@dataclasses.dataclass
+class Cell:
+    cfg: ModelConfig
+    shape: ShapeSpec
+    fn: Callable
+    args: tuple
+    in_shardings: tuple
+    out_shardings: Any
+    donate_argnums: tuple[int, ...]
+    model_flops: float
+
+
+def _named(mesh, spec_pytree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_pytree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def _fit_spec(spec: P, shape: tuple[int, ...], mesh) -> P:
+    """Drop mesh axes that do not divide the dim (top-level args must
+    divide exactly; GSPMD pads only intermediates)."""
+    entries = tuple(spec) + (None,) * (len(shape) - len(spec))
+    out = []
+    for dim, ax in zip(shape, entries):
+        if ax is None:
+            out.append(None)
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        out.append(ax if dim % size == 0 else None)
+    return P(*out)
+
+
+def sanitize(abs_tree, spec_pytree, mesh):
+    return jax.tree.map(
+        lambda a, s: _fit_spec(s, a.shape, mesh),
+        abs_tree, spec_pytree,
+        is_leaf=lambda x: isinstance(x, (P, jax.ShapeDtypeStruct)))
+
+
+def auto_microbatches(cfg: ModelConfig, shape: ShapeSpec, data_shards: int,
+                      budget_bytes: float = 4e9) -> int:
+    """Gradient-accumulation factor so the scan carry chain fits HBM.
+
+    The layer-scan saves one residual-stream carry per layer per
+    microbatch: L × tokens_per_device × d_model × 2B must fit the budget.
+    """
+    if cfg.microbatches:
+        return cfg.microbatches
+    tokens_per_dev = shape.global_batch * shape.seq_len / max(data_shards, 1)
+    carry = cfg.n_layers * tokens_per_dev * cfg.d_model * 2.0
+    micro = max(1, int(math.ceil(carry / budget_bytes)))
+    # round up to a divisor of the per-device batch
+    while shape.global_batch % micro or (shape.global_batch // micro) % 1:
+        micro += 1
+    return min(micro, shape.global_batch)
+
+
+def build_cell(
+    cfg: ModelConfig,
+    shape: ShapeSpec,
+    mesh,
+    *,
+    rules: dict | None = None,
+    optimizer: AdamW | None = None,
+) -> Cell:
+    multi_pod = "pod" in mesh.axis_names
+    tp = mesh.shape["model"]
+    kv_div = cfg.n_kv_heads % tp == 0
+    if rules is None:
+        if shape.kind == "decode":
+            # Decode: KV heads on the model axis when divisible. Otherwise
+            # shard the cache head_dim (always divisible) — the score
+            # contraction becomes a psum, which is the honest cost of
+            # TP > kv_heads. A shard_map-local seq-sharded cache update is
+            # the §Perf upgrade path.
+            rules = shlib.default_rules(
+                multi_pod=multi_pod,
+                kv="model" if kv_div else None,
+                kv_dh=None if kv_div else "model",
+                kv_seq=None)
+        elif shape.kind == "prefill":
+            # Prefill caches are produced once (no in-place update): shard
+            # KV heads when divisible, else shard the sequence axis.
+            rules = shlib.default_rules(
+                multi_pod=multi_pod,
+                kv="model" if kv_div else None,
+                kv_seq=None if kv_div else "model")
+        else:
+            # Train (§Perf H2): padding kv heads (e.g. 8 over model=16)
+            # makes GSPMD insert pad-copies and all-gathers inside the
+            # attention chunk loops; replicating the small kv activations
+            # is strictly cheaper.
+            rules = shlib.default_rules(
+                multi_pod=multi_pod, kv="model" if kv_div else None)
+    model = build_model(cfg)
+    optimizer = optimizer or AdamW(OptimizerConfig())
+
+    with shlib.use_rules(rules):
+        resolve = shlib.resolver()
+    defs = model.param_defs()
+    params_abs = abstract_tree(defs, cfg.param_dtype)
+    params_spec = sanitize(params_abs, spec_tree(defs, resolve), mesh)
+
+    batch_abs = input_specs(cfg, shape)
+    batch_spec = {
+        k: _fit_spec(P(*(resolve(a) for a in ax)), batch_abs[k].shape, mesh)
+        for k, ax in batch_axes(cfg, shape).items()
+    }
+
+    mf = model_flops(cfg, shape)
+
+    if shape.kind == "train":
+        opt_abs = optimizer.init_abstract(params_abs)
+        opt_spec = {"m": params_spec,
+                    "v": jax.tree.map(lambda s: s, params_spec),
+                    "step": P()}
+        data_shards = 1
+        for ax in (rules.get("batch") or ()):
+            data_shards *= mesh.shape[ax]
+        micro = auto_microbatches(cfg, shape, data_shards)
+
+        def train_step(params, opt_state, batch):
+            with shlib.use_rules(rules):
+                if micro > 1:
+                    mb = jax.tree.map(
+                        lambda x: x.reshape(
+                            micro, x.shape[0] // micro, *x.shape[1:]),
+                        batch)
+
+                    def micro_step(carry, b):
+                        loss_sum, grads = carry
+                        l, g = jax.value_and_grad(model.loss)(params, b)
+                        grads = jax.tree.map(jnp.add, grads, g)
+                        return (loss_sum + l, grads), None
+
+                    zeros = jax.tree.map(
+                        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+                    (loss_sum, grads), _ = jax.lax.scan(
+                        micro_step, (jnp.zeros((), jnp.float32), zeros), mb)
+                    loss = loss_sum / micro
+                    grads = jax.tree.map(lambda g: g / micro, grads)
+                else:
+                    loss, grads = jax.value_and_grad(model.loss)(params, batch)
+                params, opt_state, gnorm = optimizer.update(
+                    grads, opt_state, params)
+            return loss, params, opt_state
+
+        return Cell(
+            cfg=cfg, shape=shape, fn=train_step,
+            args=(params_abs, opt_abs, batch_abs),
+            in_shardings=(_named(mesh, params_spec), _named(mesh, opt_spec),
+                          _named(mesh, batch_spec)),
+            out_shardings=(NamedSharding(mesh, P()),
+                           _named(mesh, params_spec), _named(mesh, opt_spec)),
+            donate_argnums=(0, 1),
+            model_flops=mf,
+        )
+
+    cache_abs_pre = tuple(model.init_cache_shape(shape.global_batch, shape.seq_len))
+    cache_spec = tuple(
+        _fit_spec(P(*(resolve(a) for a in ax)), c.shape, mesh)
+        for ax, c in zip(cache_axes(cfg), cache_abs_pre))
+
+    if shape.kind == "prefill":
+        def prefill_step(params, batch):
+            with shlib.use_rules(rules):
+                return model.prefill(params, batch)
+
+        logits_spec = _fit_spec(
+            P(resolve("batch"), None, resolve("vocab")),
+            (shape.global_batch, 1, cfg.vocab), mesh)
+        return Cell(
+            cfg=cfg, shape=shape, fn=prefill_step,
+            args=(params_abs, batch_abs),
+            in_shardings=(_named(mesh, params_spec), _named(mesh, batch_spec)),
+            out_shardings=(NamedSharding(mesh, logits_spec),
+                           _named(mesh, cache_spec)),
+            donate_argnums=(),
+            model_flops=mf,
+        )
+
+    # decode
+    cache_abs = cache_abs_pre
+
+    def decode_step(params, cache, tokens, pos):
+        with shlib.use_rules(rules):
+            return model.decode_step(params, cache, tokens, pos)
+
+    logits_spec = _fit_spec(
+        P(resolve("batch"), None, resolve("vocab")),
+        (shape.global_batch, 1, cfg.vocab), mesh)
+    return Cell(
+        cfg=cfg, shape=shape, fn=decode_step,
+        args=(params_abs, cache_abs, batch_abs["tokens"],
+              jax.ShapeDtypeStruct((), jnp.int32)),
+        in_shardings=(_named(mesh, params_spec), _named(mesh, cache_spec),
+                      NamedSharding(mesh, batch_spec["tokens"]),
+                      NamedSharding(mesh, P())),
+        out_shardings=(NamedSharding(mesh, logits_spec),
+                       _named(mesh, cache_spec)),
+        donate_argnums=(1,),
+        model_flops=mf,
+    )

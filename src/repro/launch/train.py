@@ -1,0 +1,46 @@
+"""Training launcher CLI.
+
+    PYTHONPATH=src python -m repro.launch.train --arch deepseek-7b \
+        --reduced --steps 50 --ckpt-dir /tmp/ckpt [--autotune]
+
+On a real TPU cluster this process runs once per host (jax.distributed
+initializes from the environment); the CPU container runs the same code
+single-host. Checkpoints are elastic: restarts may use a different mesh.
+"""
+
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true",
+                    help="reduced config (CPU-sized)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--autotune", action="store_true")
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--fail-at", type=int, default=None,
+                    help="inject a failure at this step (recovery demo)")
+    args = ap.parse_args()
+
+    from repro.configs import get_config
+    from repro.configs.base import ShapeSpec
+    from repro.runtime.train_loop import TrainLoopConfig, train
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    shape = ShapeSpec("cli", "train", args.seq, args.batch)
+    loop = TrainLoopConfig(
+        steps=args.steps, ckpt_every=max(args.steps // 10, 1),
+        ckpt_dir=args.ckpt_dir, autotune=args.autotune,
+        compress_grads=args.compress_grads, fail_at_step=args.fail_at)
+    out = train(cfg, shape, loop)
+    print({k: v for k, v in out.items() if k != "losses"})
+
+
+if __name__ == "__main__":
+    main()

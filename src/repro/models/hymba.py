@@ -1,0 +1,164 @@
+"""Hymba: hybrid layers with *parallel* attention + Mamba heads.
+
+Each layer normalizes once, feeds the same input to a GQA attention branch
+(sliding-window) and a selective-SSM branch in parallel, combines them with
+learned per-channel output gains, then applies a standard FFN block. The
+SSM state makes decode O(1) in sequence length — the hybrid runs the
+long_500k cell with a bounded (window) KV cache plus SSM state.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import shard
+from repro.models import layers as L
+from repro.models.params import ParamDef, cast_params
+from repro.models.ssm import ssm_branch, ssm_defs
+
+
+def hymba_layer_defs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    return {
+        "ln1": ParamDef((d,), (None,), init="ones"),
+        "ln2": ParamDef((d,), (None,), init="ones"),
+        "attn": L.attention_defs(cfg),
+        "ssm": ssm_defs(cfg),
+        "beta_attn": ParamDef((d,), (None,), init="ones", scale=0.5),
+        "beta_ssm": ParamDef((d,), (None,), init="ones", scale=0.5),
+        "ffn": L.mlp_defs(cfg),
+    }
+
+
+def hymba_defs(cfg: ModelConfig) -> dict:
+    from repro.models.transformer import stack_defs
+
+    return {
+        "tok": L.embedding_defs(cfg),
+        "layers": stack_defs(hymba_layer_defs(cfg), cfg.n_layers),
+        "ln_f": ParamDef((cfg.d_model,), (None,), init="ones"),
+    }
+
+
+class HymbaLM:
+    def __init__(self, cfg: ModelConfig) -> None:
+        self.cfg = cfg
+
+    def param_defs(self) -> dict:
+        return hymba_defs(self.cfg)
+
+    # ------------------------------------------------------------ forward
+    def _layer(self, h, lp, *, positions, mode, cache=None, pos=None):
+        cfg = self.cfg
+        hn = L.norm(h, lp["ln1"], cfg.norm)
+        if mode == "decode":
+            ck, cv, conv_buf, hs = cache
+            attn, (ck, cv) = L.decode_self_attention(
+                hn, lp["attn"], cfg, ck, cv, pos)
+            s, (conv_buf, hs) = ssm_branch(
+                hn, lp["ssm"], cfg, state=(conv_buf, hs))
+            new_cache = (ck, cv, conv_buf, hs)
+        elif mode == "prefill":
+            attn, (k, v) = L.self_attention_with_cache(
+                hn, lp["attn"], cfg, positions=positions)
+            s, (conv_buf, hs) = ssm_branch(hn, lp["ssm"], cfg)
+            new_cache = (k, v, conv_buf, hs)
+        else:
+            attn = L.self_attention(hn, lp["attn"], cfg, positions=positions)
+            s, _ = ssm_branch(hn, lp["ssm"], cfg)
+            new_cache = None
+        mix = attn * lp["beta_attn"].astype(h.dtype) \
+            + s * lp["beta_ssm"].astype(h.dtype)
+        h = h + 0.5 * mix
+        h = h + L.mlp(L.norm(h, lp["ln2"], cfg.norm), lp["ffn"], cfg)
+        return shard(h, "batch", "seq", "embed"), new_cache
+
+    def loss(self, params, batch):
+        cfg = self.cfg
+        params = cast_params(params, cfg.compute_dtype)
+        tokens = batch["tokens"]
+        B, T = tokens.shape
+        x = L.embed_tokens(tokens, params["tok"], cfg)
+        positions = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
+
+        def body(h, lp):
+            h, _ = self._layer(h, lp, positions=positions, mode="train")
+            return h, None
+
+        h, _ = jax.lax.scan(jax.checkpoint(body), x, params["layers"])
+        h = L.norm(h, params["ln_f"], cfg.norm)
+        logits = L.logits_out(h, params["tok"], cfg)
+        return L.cross_entropy(logits, batch["labels"], batch.get("mask"))
+
+    def prefill(self, params, batch):
+        cfg = self.cfg
+        params = cast_params(params, cfg.compute_dtype)
+        tokens = batch["tokens"]
+        B, T = tokens.shape
+        x = L.embed_tokens(tokens, params["tok"], cfg)
+        positions = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
+
+        def body(h, lp):
+            h, cache = self._layer(h, lp, positions=positions, mode="prefill")
+            return h, cache
+
+        h, caches = jax.lax.scan(jax.checkpoint(body), x, params["layers"])
+        h = L.norm(h, params["ln_f"], cfg.norm)
+        logits = L.logits_out(h[:, -1:], params["tok"], cfg)
+        # prefill cache may exceed the decode window: keep the tail slice
+        k, v, conv_buf, hs = caches
+        W = self._cache_window(T)
+        if k.shape[2] > W:
+            k, v = k[:, :, -W:], v[:, :, -W:]
+        return logits, (k, v, conv_buf, hs)
+
+    def decode_step(self, params, cache, tokens, pos):
+        cfg = self.cfg
+        params = cast_params(params, cfg.compute_dtype)
+        x = L.embed_tokens(tokens, params["tok"], cfg)
+        ks, vs, convs, hss = cache
+
+        def body(carry, inp):
+            h, ks, vs = carry
+            lp, i, conv_buf, hs = inp
+            ck = L.from_bits(jax.lax.dynamic_index_in_dim(ks, i, 0, keepdims=False))
+            cv = L.from_bits(jax.lax.dynamic_index_in_dim(vs, i, 0, keepdims=False))
+            h, (ck, cv, conv_buf, hs) = self._layer(
+                h, lp, positions=None, mode="decode",
+                cache=(ck, cv, conv_buf, hs), pos=pos)
+            ks = jax.lax.dynamic_update_index_in_dim(ks, L.to_bits(ck), i, 0)
+            vs = jax.lax.dynamic_update_index_in_dim(vs, L.to_bits(cv), i, 0)
+            return (h, ks, vs), (conv_buf, hs)
+
+        (h, ks, vs), (convs, hss) = jax.lax.scan(
+            body, (x, L.to_bits(ks), L.to_bits(vs)),
+            (params["layers"], jnp.arange(cfg.n_layers), convs, hss))
+        h = L.norm(h, params["ln_f"], cfg.norm)
+        logits = L.logits_out(h, params["tok"], cfg)
+        return logits, (L.from_bits(ks), L.from_bits(vs), convs, hss)
+
+    # ------------------------------------------------------------- caches
+    def _cache_window(self, max_len: int) -> int:
+        cfg = self.cfg
+        return min(max_len, cfg.window) if cfg.window else max_len
+
+    def init_cache_shape(self, batch: int, max_len: int):
+        cfg = self.cfg
+        W = self._cache_window(max_len)
+        Lr = cfg.n_layers
+        di = cfg.d_model
+        return (
+            jax.ShapeDtypeStruct((Lr, batch, W, cfg.n_kv_heads, cfg.d_head),
+                                 cfg.compute_dtype),
+            jax.ShapeDtypeStruct((Lr, batch, W, cfg.n_kv_heads, cfg.d_head),
+                                 cfg.compute_dtype),
+            jax.ShapeDtypeStruct((Lr, batch, cfg.ssm_conv - 1, di),
+                                 cfg.compute_dtype),
+            jax.ShapeDtypeStruct((Lr, batch, di, cfg.ssm_state), jnp.float32),
+        )
+
+    def init_cache(self, batch: int, max_len: int):
+        return tuple(jnp.zeros(s.shape, s.dtype)
+                     for s in self.init_cache_shape(batch, max_len))

@@ -1,0 +1,24 @@
+"""Model dispatcher: config → model instance."""
+
+from __future__ import annotations
+
+from repro.configs.base import ModelConfig
+from repro.models.hymba import HymbaLM
+from repro.models.rwkv6 import RWKV6LM
+from repro.models.transformer import TransformerLM
+from repro.models.vlm import VLM
+from repro.models.whisper import WhisperLM
+
+
+def build_model(cfg: ModelConfig):
+    if cfg.family in ("dense", "moe"):
+        return TransformerLM(cfg)
+    if cfg.family == "vlm":
+        return VLM(cfg)
+    if cfg.family == "rwkv":
+        return RWKV6LM(cfg)
+    if cfg.family == "hybrid":
+        return HymbaLM(cfg)
+    if cfg.family == "encdec":
+        return WhisperLM(cfg)
+    raise ValueError(f"unknown model family {cfg.family!r}")

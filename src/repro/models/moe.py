@@ -1,0 +1,108 @@
+"""Mixture-of-Experts FFN: GShard-style grouped capacity dispatch.
+
+Tokens are reshaped into groups of ``moe_group_size``; each of the top-k
+routing choices is dispatched as an independent top-1 slice (k small
+dispatch tensors instead of one huge one), keeping the dispatch one-hot at
+(G, S, E, C) with small C. Experts live on the ``expert``→model mesh axis;
+groups follow the batch axes, so GSPMD materializes the dispatch/combine
+einsums as all-to-all-style exchanges between the data and model axes.
+
+Dropped tokens (capacity overflow) pass through with zero contribution, as
+in GShard/Switch. A load-balancing auxiliary loss is returned.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import shard
+from repro.models.params import ParamDef
+from repro.models import layers as L
+
+
+def moe_defs(cfg: ModelConfig) -> dict:
+    d, ff, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    s_in = 1.0 / math.sqrt(d)
+    s_out = 1.0 / math.sqrt(ff)
+    defs = {
+        "router": ParamDef((d, E), ("embed", None), scale=s_in),
+        "w_gate": ParamDef((E, d, ff), ("expert", "embed", None), scale=s_in),
+        "w_up": ParamDef((E, d, ff), ("expert", "embed", None), scale=s_in),
+        "w_down": ParamDef((E, ff, d), ("expert", None, "embed"), scale=s_out),
+    }
+    if cfg.n_shared_experts:
+        defs["shared"] = L.mlp_defs(
+            cfg, d_ff=cfg.d_ff * cfg.n_shared_experts
+        )
+    return defs
+
+
+def capacity(cfg: ModelConfig, group_len: int | None = None) -> int:
+    S = group_len if group_len is not None else cfg.moe_group_size
+    return max(4, math.ceil(S / cfg.n_experts * cfg.capacity_factor))
+
+
+def moe_ffn(x: jax.Array, p: dict, cfg: ModelConfig) -> tuple[jax.Array, jax.Array]:
+    """x: (B, T, d) → (out, aux_loss)."""
+    B, T, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    N = B * T
+    S = min(cfg.moe_group_size, N)
+    G = -(-N // S)
+    Np = G * S
+    C = capacity(cfg, S)
+
+    x_flat = x.reshape(N, d)
+    if Np != N:   # ragged tail: pad tokens (they waste a little capacity)
+        x_flat = jnp.concatenate(
+            [x_flat, jnp.zeros((Np - N, d), x.dtype)], axis=0)
+    xg = x_flat.reshape(G, S, d)
+    xg = shard(xg, "groups", None, "embed")
+
+    logits = jnp.einsum(
+        "gsd,de->gse", xg.astype(jnp.float32), p["router"].astype(jnp.float32)
+    )
+    probs = jax.nn.softmax(logits, axis=-1)               # (G, S, E)
+    gate_w, gate_idx = jax.lax.top_k(probs, k)            # (G, S, k)
+    gate_w = gate_w / jnp.maximum(
+        jnp.sum(gate_w, axis=-1, keepdims=True), 1e-9)
+
+    # Switch/GShard load-balancing aux loss over all tokens.
+    me = jnp.mean(probs, axis=(0, 1))                                   # (E,)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(gate_idx, E, dtype=jnp.float32), axis=2),
+        axis=(0, 1),
+    ) / k                                                               # (E,)
+    aux = E * jnp.sum(me * ce)
+
+    out = jnp.zeros_like(xg)
+    for j in range(k):                    # k independent top-1 dispatches
+        e_j = gate_idx[..., j]                                   # (G, S)
+        w_j = gate_w[..., j].astype(xg.dtype)                    # (G, S)
+        onehot_e = jax.nn.one_hot(e_j, E, dtype=jnp.float32)     # (G, S, E)
+        pos = jnp.einsum(
+            "gse->gs",
+            jnp.cumsum(onehot_e, axis=1) * onehot_e,
+        ) - 1.0                                                  # (G, S)
+        keep = (pos < C).astype(jnp.float32)
+        pos_oh = jax.nn.one_hot(pos.astype(jnp.int32), C, dtype=jnp.float32)
+        dispatch = (onehot_e[..., None] * pos_oh[..., None, :]
+                    * keep[..., None, None]).astype(xg.dtype)    # (G,S,E,C)
+        xe = jnp.einsum("gsec,gsd->gecd", dispatch, xg)          # (G,E,C,d)
+        xe = shard(xe, "groups", "expert", None, None)
+        g = jnp.einsum("gecd,edf->gecf", xe, p["w_gate"].astype(xe.dtype))
+        u = jnp.einsum("gecd,edf->gecf", xe, p["w_up"].astype(xe.dtype))
+        h = jax.nn.silu(g) * u
+        ye = jnp.einsum("gecf,efd->gecd", h, p["w_down"].astype(xe.dtype))
+        ye = shard(ye, "groups", "expert", None, None)
+        combine = dispatch * w_j[..., None, None]
+        out = out + jnp.einsum("gsec,gecd->gsd", combine, ye)
+
+    out = out.reshape(Np, d)[:N].reshape(B, T, d)
+    if cfg.n_shared_experts:
+        out = out + L.mlp(x, p["shared"], cfg)
+    return shard(out, "batch", "seq", "embed"), aux

@@ -1,0 +1,272 @@
+"""RWKV-6 "Finch" (attention-free, data-dependent per-channel decay).
+
+Recurrence (per head, head size C):
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    y_t = r_t^T S_{t-1} + (r_t · (u ⊙ k_t)) v_t^T
+with w_t = exp(-exp(ŵ_t)) produced by a data-dependent LoRA (the defining
+RWKV-6 feature), plus token-shift ddlerp mixing and a squared-ReLU
+channel-mix FFN.
+
+Training uses a chunk-parallel form (GLA-style): within a chunk the decays
+are folded into q̃ = r ⊙ exp(cl_{t-1}) and k̃ = k ⊙ exp(−cl_t), clamped in
+log space to ±30 for fp32 safety; chunks are scanned with remat. The chunk
+length is an auto-tunable (the paper's unroll-factor analogue for this
+architecture — see DESIGN.md §6). Decode is O(1): one state update.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import shard
+from repro.models import layers as L
+from repro.models.params import ParamDef, cast_params
+
+LORA_MIX = 32
+LORA_DECAY = 64
+CLAMP = 30.0
+
+
+def rwkv_layer_defs(cfg: ModelConfig) -> dict:
+    d, ff = cfg.d_model, cfg.d_ff
+    C = cfg.rwkv_head_size
+    H = d // C
+    s = 1.0 / math.sqrt(d)
+    return {
+        "ln1": ParamDef((d,), (None,), init="ones"),
+        "ln2": ParamDef((d,), (None,), init="ones"),
+        "tm": {  # time-mix block
+            "mu_x": ParamDef((d,), (None,), init="zeros"),
+            "mu": ParamDef((5, d), (None, None), init="zeros"),
+            "lora_a": ParamDef((d, 5 * LORA_MIX), ("embed", None), scale=s),
+            "lora_b": ParamDef((5, LORA_MIX, d), (None, None, "embed"),
+                               scale=0.01),
+            "wr": ParamDef((d, d), ("embed", "heads"), scale=s),
+            "wk": ParamDef((d, d), ("embed", "heads"), scale=s),
+            "wv": ParamDef((d, d), ("embed", "heads"), scale=s),
+            "wg": ParamDef((d, d), ("embed", "heads"), scale=s),
+            "wo": ParamDef((d, d), ("heads", "embed"), scale=s),
+            "w_base": ParamDef((d,), (None,), init="zeros"),
+            "w_lora_a": ParamDef((d, LORA_DECAY), ("embed", None), scale=s),
+            "w_lora_b": ParamDef((LORA_DECAY, d), (None, "embed"), scale=0.01),
+            "u": ParamDef((H, C), ("heads", None), init="zeros"),
+            "ln_x": ParamDef((d,), (None,), init="ones"),
+        },
+        "cm": {  # channel-mix block
+            "mu_k": ParamDef((d,), (None,), init="zeros"),
+            "mu_r": ParamDef((d,), (None,), init="zeros"),
+            "wk": ParamDef((d, ff), ("embed", "ffn"), scale=s),
+            "wv": ParamDef((ff, d), ("ffn", "embed"), scale=1.0 / math.sqrt(ff)),
+            "wr": ParamDef((d, d), ("embed", "heads"), scale=s),
+        },
+    }
+
+
+def rwkv_defs(cfg: ModelConfig) -> dict:
+    from repro.models.transformer import stack_defs
+
+    return {
+        "tok": L.embedding_defs(cfg),
+        "ln_in": ParamDef((cfg.d_model,), (None,), init="ones"),
+        "layers": stack_defs(rwkv_layer_defs(cfg), cfg.n_layers),
+        "ln_f": ParamDef((cfg.d_model,), (None,), init="ones"),
+    }
+
+
+def _token_shift(x: jax.Array, prev: jax.Array | None = None) -> jax.Array:
+    """shift(x)[t] = x[t-1]; position 0 takes `prev` (decode) or zeros."""
+    if x.shape[1] == 1 and prev is not None:
+        return prev[:, None, :]
+    shifted = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    if prev is not None:
+        shifted = shifted.at[:, 0].set(prev)
+    return shifted
+
+
+def _ddlerp(x, xx, p):
+    """RWKV-6 data-dependent token-shift mixing → 5 mixed inputs."""
+    s = jnp.tanh(jnp.einsum(
+        "btd,dk->btk", x + xx * p["mu_x"].astype(x.dtype),
+        p["lora_a"].astype(x.dtype)))
+    s = s.reshape(*s.shape[:-1], 5, LORA_MIX)
+    dyn = jnp.einsum("btnk,nkd->btnd", s, p["lora_b"].astype(x.dtype))
+    mix = p["mu"].astype(x.dtype)[None, None] + dyn        # (B,T,5,d)
+    return tuple(x + xx * mix[:, :, i] for i in range(5))
+
+
+def wkv_chunked(r, k, v, logw, u, S0, chunk: int):
+    """Chunk-parallel WKV. r/k/v/logw: (B, T, H, C); u: (H, C);
+    S0: (B, H, C, C). Returns (y (B,T,H,C), S_final)."""
+    B, T, H, C = r.shape
+    Lc = min(chunk, T)
+    n = -(-T // Lc)
+    Tp = n * Lc
+    if Tp != T:
+        # identity padding: logw=0 (decay 1), r/k/v=0 → state frozen past T
+        pad = lambda x, v=0.0: jnp.concatenate(
+            [x, jnp.full((B, Tp - T, H, C), v, x.dtype)], axis=1)
+        r, k, v_, logw = pad(r), pad(k), pad(v), pad(logw)
+        v = v_
+    rr = r.reshape(B, n, Lc, H, C).transpose(1, 0, 2, 3, 4)
+    kk = k.reshape(B, n, Lc, H, C).transpose(1, 0, 2, 3, 4)
+    vv = v.reshape(B, n, Lc, H, C).transpose(1, 0, 2, 3, 4)
+    ww = logw.reshape(B, n, Lc, H, C).transpose(1, 0, 2, 3, 4)
+
+    mask = jnp.tril(jnp.ones((Lc, Lc), jnp.float32), k=-1)  # strict lower
+
+    def body(S, inp):
+        rc, kc, vc, lw = inp                     # (B, Lc, H, C)
+        cl = jnp.cumsum(lw, axis=1)              # inclusive
+        cl_prev = cl - lw                        # exclusive
+        qt = rc * jnp.exp(jnp.maximum(cl_prev, -CLAMP))
+        kt = kc * jnp.exp(jnp.minimum(-cl, CLAMP))
+        att = jnp.einsum("blhc,bmhc->bhlm", qt, kt) * mask[None, None]
+        y = jnp.einsum("bhlm,bmhc->blhc", att, vc)
+        bonus = jnp.einsum("blhc,hc,blhc->blh", rc, u, kc)
+        y = y + bonus[..., None] * vc
+        y = y + jnp.einsum("blhc,bhcd->blhd", qt, S)
+        cl_end = cl[:, -1:]                      # (B,1,H,C)
+        k2 = kc * jnp.exp(jnp.maximum(cl_end - cl, -CLAMP))
+        S = jnp.exp(jnp.maximum(cl_end[:, 0], -CLAMP))[..., None] * S \
+            + jnp.einsum("blhc,blhd->bhcd", k2, vc)
+        return S, y
+
+    S, ys = jax.lax.scan(jax.checkpoint(body), S0, (rr, kk, vv, ww))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, Tp, H, C)[:, :T]
+    return y, S
+
+
+def time_mix(x, p, cfg: ModelConfig, *, S0=None, x_prev=None):
+    """Returns (out, S_final, last_x). x: (B, T, d)."""
+    B, T, d = x.shape
+    C = cfg.rwkv_head_size
+    H = d // C
+    xx = _token_shift(x, x_prev) - x
+    xw, xk, xv, xr, xg = _ddlerp(x, xx, p)
+
+    r = jnp.einsum("btd,de->bte", xr, p["wr"].astype(x.dtype))
+    k = jnp.einsum("btd,de->bte", xk, p["wk"].astype(x.dtype))
+    v = jnp.einsum("btd,de->bte", xv, p["wv"].astype(x.dtype))
+    g = jnp.einsum("btd,de->bte", xg, p["wg"].astype(x.dtype))
+    w_raw = p["w_base"].astype(jnp.float32) + jnp.einsum(
+        "btd,dk,ke->bte", xw.astype(jnp.float32),
+        p["w_lora_a"].astype(jnp.float32), p["w_lora_b"].astype(jnp.float32))
+    logw = -jnp.exp(jnp.clip(w_raw, -8.0, 4.0))           # log decay < 0
+
+    rs = r.reshape(B, T, H, C).astype(jnp.float32)
+    ks = k.reshape(B, T, H, C).astype(jnp.float32)
+    vs = v.reshape(B, T, H, C).astype(jnp.float32)
+    ws = logw.reshape(B, T, H, C)
+    if S0 is None:
+        S0 = jnp.zeros((B, H, C, C), jnp.float32)
+    y, S = wkv_chunked(rs, ks, vs, ws, p["u"].astype(jnp.float32), S0,
+                       cfg.scan_chunk)
+    y = y.reshape(B, T, d).astype(x.dtype)
+    # per-head group norm (scale-only), then output gating
+    yh = y.reshape(B, T, H, C)
+    yh32 = yh.astype(jnp.float32)
+    mu = jnp.mean(yh32, axis=-1, keepdims=True)
+    var = jnp.var(yh32, axis=-1, keepdims=True)
+    yh = ((yh32 - mu) * jax.lax.rsqrt(var + 1e-5)).astype(x.dtype)
+    y = (yh.reshape(B, T, d) * p["ln_x"].astype(x.dtype))
+    y = y * jax.nn.silu(g)
+    out = jnp.einsum("btd,de->bte", y, p["wo"].astype(x.dtype))
+    return shard(out, "batch", "seq", "embed"), S, x[:, -1]
+
+
+def channel_mix(x, p, cfg: ModelConfig, *, x_prev=None):
+    xx = _token_shift(x, x_prev) - x
+    xk = x + xx * p["mu_k"].astype(x.dtype)
+    xr = x + xx * p["mu_r"].astype(x.dtype)
+    k = jnp.einsum("btd,df->btf", xk, p["wk"].astype(x.dtype))
+    k = jnp.square(jax.nn.relu(k))
+    k = shard(k, "batch", "seq", "ffn")
+    kv = jnp.einsum("btf,fd->btd", k, p["wv"].astype(x.dtype))
+    r = jax.nn.sigmoid(jnp.einsum("btd,de->bte", xr, p["wr"].astype(x.dtype)))
+    return shard(r * kv, "batch", "seq", "embed"), x[:, -1]
+
+
+class RWKV6LM:
+    def __init__(self, cfg: ModelConfig) -> None:
+        self.cfg = cfg
+        assert cfg.d_model % cfg.rwkv_head_size == 0
+
+    def param_defs(self) -> dict:
+        return rwkv_defs(self.cfg)
+
+    def _forward(self, params, x, state=None):
+        """state: (S, xa, xc) stacked over layers, or None (train)."""
+        cfg = self.cfg
+        decode = state is not None
+
+        def body(carry, inp):
+            h = carry
+            if decode:
+                lp, S0, xa, xc = inp
+            else:
+                lp, S0, xa, xc = inp, None, None, None
+            a, S, last_a = time_mix(
+                L.norm(h, lp["ln1"], cfg.norm), lp["tm"], cfg,
+                S0=S0, x_prev=xa)
+            h = h + a
+            c, last_c = channel_mix(
+                L.norm(h, lp["ln2"], cfg.norm), lp["cm"], cfg, x_prev=xc)
+            h = h + c
+            h = shard(h, "batch", "seq", "embed")
+            return h, (S, last_a, last_c)
+
+        if decode:
+            xs = (params["layers"],) + tuple(state)
+        else:
+            xs = params["layers"]
+        fn = body if decode else jax.checkpoint(body)
+        h, new_state = jax.lax.scan(fn, x, xs)
+        return L.norm(h, params["ln_f"], cfg.norm), new_state
+
+    def loss(self, params, batch):
+        cfg = self.cfg
+        params = cast_params(params, cfg.compute_dtype)
+        tokens = batch["tokens"]
+        x = L.embed_tokens(tokens, params["tok"], cfg)
+        x = L.norm(x, params["ln_in"], cfg.norm)
+        h, _ = self._forward(params, x)
+        logits = L.logits_out(h, params["tok"], cfg)
+        return L.cross_entropy(logits, batch["labels"], batch.get("mask"))
+
+    def prefill(self, params, batch):
+        cfg = self.cfg
+        params = cast_params(params, cfg.compute_dtype)
+        tokens = batch["tokens"]
+        x = L.embed_tokens(tokens, params["tok"], cfg)
+        x = L.norm(x, params["ln_in"], cfg.norm)
+        h, state = self._forward(params, x)
+        logits = L.logits_out(h[:, -1:], params["tok"], cfg)
+        return logits, state
+
+    def decode_step(self, params, state, tokens, pos):
+        cfg = self.cfg
+        params = cast_params(params, cfg.compute_dtype)
+        x = L.embed_tokens(tokens, params["tok"], cfg)
+        x = L.norm(x, params["ln_in"], cfg.norm)
+        h, state = self._forward(params, x, state=state)
+        logits = L.logits_out(h, params["tok"], cfg)
+        return logits, state
+
+    def init_cache_shape(self, batch: int, max_len: int):
+        cfg = self.cfg
+        C = cfg.rwkv_head_size
+        H = cfg.d_model // C
+        Lr = cfg.n_layers
+        return (
+            jax.ShapeDtypeStruct((Lr, batch, H, C, C), jnp.float32),
+            jax.ShapeDtypeStruct((Lr, batch, cfg.d_model), cfg.compute_dtype),
+            jax.ShapeDtypeStruct((Lr, batch, cfg.d_model), cfg.compute_dtype),
+        )
+
+    def init_cache(self, batch: int, max_len: int):
+        return tuple(jnp.zeros(s.shape, s.dtype)
+                     for s in self.init_cache_shape(batch, max_len))

@@ -1,0 +1,129 @@
+"""Selective SSM (Mamba-style) branch used by the Hymba hybrid.
+
+Diagonal data-dependent SSM:
+    h_t = exp(Δ_t ⊙ A) ⊙ h_{t-1} + (Δ_t x_t) ⊗ B_t
+    y_t = C_t · h_t + D ⊙ x_t
+with a short causal depthwise conv + SiLU in front and a SiLU output gate.
+
+Training uses a chunk-parallel associative scan (chunk length =
+``scan_chunk``, auto-tunable); decode keeps (conv buffer, h) state — O(1)
+per token, which is what makes the hybrid eligible for long_500k.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import shard
+from repro.models.params import ParamDef
+
+
+def ssm_defs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    di = cfg.d_model          # inner width = d_model (parallel-branch hybrid)
+    st = cfg.ssm_state
+    ck = cfg.ssm_conv
+    s = 1.0 / math.sqrt(d)
+    return {
+        "w_in": ParamDef((d, 2 * di), ("embed", "heads"), scale=s),
+        "conv_w": ParamDef((ck, di), (None, "heads"), scale=0.5),
+        "w_b": ParamDef((di, st), ("heads", None), scale=1.0 / math.sqrt(di)),
+        "w_c": ParamDef((di, st), ("heads", None), scale=1.0 / math.sqrt(di)),
+        "w_dt": ParamDef((di, 1), ("heads", None), scale=1.0 / math.sqrt(di)),
+        "dt_bias": ParamDef((di,), ("heads",), init="zeros"),
+        "a_log": ParamDef((di, st), ("heads", None), init="zeros"),
+        "d_skip": ParamDef((di,), ("heads",), init="ones"),
+        "w_out": ParamDef((di, d), ("heads", "embed"), scale=1.0 / math.sqrt(di)),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, prev: jax.Array | None):
+    """Depthwise causal conv. x: (B, T, di); w: (ck, di);
+    prev: (B, ck-1, di) decode buffer or None (zero history)."""
+    ck = w.shape[0]
+    if prev is None:
+        prev = jnp.zeros((x.shape[0], ck - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([prev, x], axis=1)          # (B, T+ck-1, di)
+    out = sum(
+        xp[:, i:i + x.shape[1]] * w[i][None, None] for i in range(ck)
+    )
+    new_prev = xp[:, -(ck - 1):] if ck > 1 else prev
+    return out, new_prev
+
+
+def ssm_scan_chunked(a, b, h0, chunk: int):
+    """Associative scan of h_t = a_t h_{t-1} + b_t in chunks.
+
+    a, b: (B, T, di, st); h0: (B, di, st). Returns (h_all, h_final)."""
+    B, T, di, st = a.shape
+    Lc = min(chunk, T)
+    n = -(-T // Lc)
+    Tp = n * Lc
+    if Tp != T:
+        # identity padding: a=1 (no decay), b=0 → state frozen past T
+        a = jnp.concatenate(
+            [a, jnp.ones((B, Tp - T, di, st), a.dtype)], axis=1)
+        b = jnp.concatenate(
+            [b, jnp.zeros((B, Tp - T, di, st), b.dtype)], axis=1)
+
+    ar = a.reshape(B, n, Lc, di, st).transpose(1, 0, 2, 3, 4)
+    br = b.reshape(B, n, Lc, di, st).transpose(1, 0, 2, 3, 4)
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    def body(h, inp):
+        ac, bc = inp                                  # (B, Lc, di, st)
+        a_cum, b_cum = jax.lax.associative_scan(combine, (ac, bc), axis=1)
+        h_all = a_cum * h[:, None] + b_cum
+        return h_all[:, -1], h_all
+
+    h, ys = jax.lax.scan(jax.checkpoint(body), h0, (ar, br))
+    h_all = ys.transpose(1, 0, 2, 3, 4).reshape(B, Tp, di, st)[:, :T]
+    return h_all, h
+
+
+def ssm_branch(x, p, cfg: ModelConfig, *, state=None):
+    """x: (B, T, d). state: (conv_buf, h) or None.
+    Returns (y, new_state)."""
+    B, T, d = x.shape
+    st = cfg.ssm_state
+    conv_buf, h0 = state if state is not None else (None, None)
+
+    xz = jnp.einsum("btd,de->bte", x, p["w_in"].astype(x.dtype))
+    xi, z = jnp.split(xz, 2, axis=-1)                # (B, T, di) each
+    xi = shard(xi, "batch", "seq", "heads")
+    xi, conv_buf = _causal_conv(xi, p["conv_w"].astype(x.dtype), conv_buf)
+    xi = jax.nn.silu(xi)
+
+    xf = xi.astype(jnp.float32)
+    bt = jnp.einsum("btd,ds->bts", xf, p["w_b"].astype(jnp.float32))
+    ct = jnp.einsum("btd,ds->bts", xf, p["w_c"].astype(jnp.float32))
+    # rank-1 data-dependent step size (scalar per token + per-channel bias)
+    dt_raw = jnp.einsum("btd,do->bto", xf, p["w_dt"].astype(jnp.float32))
+    dt = jax.nn.softplus(
+        dt_raw + p["dt_bias"].astype(jnp.float32)[None, None]
+    )                                                 # (B, T, di)
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))      # (di, st), negative
+    a = jnp.exp(dt[..., None] * A[None, None])        # (B, T, di, st)
+    b = (dt * xf)[..., None] * bt[:, :, None, :]      # (B, T, di, st)
+
+    if h0 is None:
+        h0 = jnp.zeros((B, xi.shape[-1], st), jnp.float32)
+    if T == 1:
+        h_last = a[:, 0] * h0 + b[:, 0]
+        h_all = h_last[:, None]
+    else:
+        h_all, h_last = ssm_scan_chunked(a, b, h0, cfg.scan_chunk)
+
+    y = jnp.einsum("btds,bts->btd", h_all, ct)        # (B, T, di)
+    y = y + p["d_skip"].astype(jnp.float32)[None, None] * xf
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = jnp.einsum("btd,de->bte", y, p["w_out"].astype(x.dtype))
+    return shard(out, "batch", "seq", "embed"), (conv_buf, h_last)

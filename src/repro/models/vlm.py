@@ -1,0 +1,83 @@
+"""Qwen2-VL-style backbone: decoder LM with M-RoPE over (t, h, w).
+
+The vision frontend is a STUB per the brief: ``input_specs`` provides
+precomputed patch embeddings (B, P, d_model), which are prepended to the
+text embeddings. Vision positions use an (t=0, h, w) grid; text positions
+continue the temporal stream after the grid.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import shard
+from repro.models import layers as L
+from repro.models.params import cast_params
+from repro.models.transformer import TransformerLM, forward_prefill, forward_train
+
+
+def mrope_positions(P: int, T_text: int, B: int) -> jax.Array:
+    """(3, B, P+T_text) positions: vision grid then text stream."""
+    side = max(int(math.sqrt(P)), 1)
+    idx = jnp.arange(P)
+    vis_t = jnp.zeros((P,), jnp.int32)
+    vis_h = (idx // side).astype(jnp.int32)
+    vis_w = (idx % side).astype(jnp.int32)
+    t0 = side  # text stream starts after the grid's spatial extent
+    txt = t0 + jnp.arange(T_text, dtype=jnp.int32)
+    pos = jnp.stack([
+        jnp.concatenate([vis_t, txt]),
+        jnp.concatenate([vis_h, txt]),
+        jnp.concatenate([vis_w, txt]),
+    ])                                                   # (3, P+T)
+    return jnp.broadcast_to(pos[:, None], (3, B, P + T_text))
+
+
+class VLM(TransformerLM):
+    """Reuses the dense transformer stack with multimodal input assembly."""
+
+    def _assemble(self, params, batch):
+        cfg = self.cfg
+        tokens = batch["tokens"]                        # (B, T_text)
+        vision = batch["vision"]                        # (B, P, d)
+        B, T_text = tokens.shape
+        P = vision.shape[1]
+        tok_x = L.embed_tokens(tokens, params["tok"], cfg)
+        x = jnp.concatenate([vision.astype(tok_x.dtype), tok_x], axis=1)
+        x = shard(x, "batch", "seq", "embed")
+        positions = batch.get("positions")
+        if positions is None:
+            positions = mrope_positions(P, T_text, B)
+        return x, positions, P
+
+    def loss(self, params, batch):
+        cfg = self.cfg
+        params = cast_params(params, cfg.compute_dtype)
+        x, positions, P = self._assemble(params, batch)
+        h, aux = forward_train(params, x, positions, cfg)
+        logits = L.logits_out(h[:, P:], params["tok"], cfg)
+        loss = L.cross_entropy(logits, batch["labels"], batch.get("mask"))
+        return loss + 0.01 * aux
+
+    def prefill(self, params, batch):
+        cfg = self.cfg
+        params = cast_params(params, cfg.compute_dtype)
+        x, positions, P = self._assemble(params, batch)
+        h, cache = forward_prefill(params, x, positions, cfg)
+        logits = L.logits_out(h[:, -1:], params["tok"], cfg)
+        return logits, cache
+
+    def decode_step(self, params, cache, tokens, pos, rope_pos=None):
+        # The cache slot is `pos`; the M-RoPE temporal position of text
+        # token i is `side + i` (the grid occupies one temporal step and
+        # `side` spatial steps). pos counts vision patches + text tokens.
+        if rope_pos is None:
+            P = self.cfg.vision_patches
+            side = max(int(math.sqrt(max(P, 1))), 1)
+            rope_pos = pos - P + side
+        return super().decode_step(params, cache, tokens, pos,
+                                   rope_pos=rope_pos)

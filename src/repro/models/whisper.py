@@ -1,0 +1,179 @@
+"""Whisper-style encoder–decoder (audio backbone; conv frontend stubbed).
+
+Per the brief, the modality frontend is a STUB: ``input_specs`` provides
+precomputed frame embeddings (B, F, d). The encoder is a bidirectional
+transformer over frames (sinusoidal positions); the decoder is causal with
+cross-attention (learned positions), tied unembedding.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import shard
+from repro.models import layers as L
+from repro.models.params import ParamDef, cast_params
+
+
+def whisper_defs(cfg: ModelConfig) -> dict:
+    from repro.models.transformer import stack_defs
+
+    d = cfg.d_model
+    enc_layer = {
+        "ln1": ParamDef((d,), (None,), init="ones"),
+        "attn": L.attention_defs(cfg),
+        "ln2": ParamDef((d,), (None,), init="ones"),
+        "ffn": L.mlp_defs(cfg),
+    }
+    dec_layer = {
+        "ln1": ParamDef((d,), (None,), init="ones"),
+        "attn": L.attention_defs(cfg),
+        "ln_c": ParamDef((d,), (None,), init="ones"),
+        "xattn": L.attention_defs(cfg),
+        "ln2": ParamDef((d,), (None,), init="ones"),
+        "ffn": L.mlp_defs(cfg),
+    }
+    return {
+        "tok": {"embed": ParamDef((cfg.vocab, d), ("vocab", "embed"), scale=0.02)},
+        "dec_pos": ParamDef((cfg.max_decode_len, d), (None, "embed"), scale=0.01),
+        "enc_layers": stack_defs(enc_layer, cfg.enc_layers),
+        "enc_ln_f": ParamDef((d,), (None,), init="ones"),
+        "dec_layers": stack_defs(dec_layer, cfg.n_layers),
+        "dec_ln_f": ParamDef((d,), (None,), init="ones"),
+    }
+
+
+class WhisperLM:
+    def __init__(self, cfg: ModelConfig) -> None:
+        self.cfg = cfg
+
+    def param_defs(self) -> dict:
+        return whisper_defs(self.cfg)
+
+    # ------------------------------------------------------------ encoder
+    def encode(self, params, audio_embeds: jax.Array) -> jax.Array:
+        cfg = self.cfg
+        B, F, d = audio_embeds.shape
+        x = audio_embeds.astype(cfg.compute_dtype)
+        x = x + L.sinusoidal_embedding(F, d).astype(x.dtype)[None]
+        x = shard(x, "batch", "seq", "embed")
+
+        def body(h, lp):
+            hn = L.norm(h, lp["ln1"], cfg.norm)
+            h = h + L.self_attention(hn, lp["attn"], cfg,
+                                     positions=None, causal=False)
+            h = h + L.mlp(L.norm(h, lp["ln2"], cfg.norm), lp["ffn"], cfg)
+            return shard(h, "batch", "seq", "embed"), None
+
+        x, _ = jax.lax.scan(jax.checkpoint(body), x, params["enc_layers"])
+        return L.norm(x, params["enc_ln_f"], cfg.norm)
+
+    # ------------------------------------------------------------ decoder
+    def _embed_dec(self, params, tokens, pos0=0):
+        cfg = self.cfg
+        B, T = tokens.shape
+        x = params["tok"]["embed"].astype(cfg.compute_dtype)[tokens]
+        pe = jax.lax.dynamic_slice_in_dim(
+            params["dec_pos"].astype(x.dtype), pos0, T, axis=0)
+        return shard(x + pe[None], "batch", "seq", "embed")
+
+    def _logits(self, params, h):
+        logits = jnp.einsum(
+            "btd,vd->btv", h, params["tok"]["embed"].astype(h.dtype))
+        return shard(logits, "batch", "seq", "vocab")
+
+    def _decode_stack(self, params, x, enc_out, mode, cache=None, pos=None):
+        cfg = self.cfg
+
+        if mode == "decode":
+            ks, vs, xks, xvs = cache
+
+            def body(carry, inp):
+                h, ks, vs = carry
+                lp, i, xk, xv = inp
+                ck = L.from_bits(
+                    jax.lax.dynamic_index_in_dim(ks, i, 0, keepdims=False))
+                cv = L.from_bits(
+                    jax.lax.dynamic_index_in_dim(vs, i, 0, keepdims=False))
+                hn = L.norm(h, lp["ln1"], cfg.norm)
+                attn, (ck, cv) = L.decode_self_attention(
+                    hn, lp["attn"], cfg, ck, cv, pos)
+                h = h + attn
+                hc = L.norm(h, lp["ln_c"], cfg.norm)
+                h = h + L.cross_attention(hc, lp["xattn"], cfg, xk, xv)
+                h = h + L.mlp(L.norm(h, lp["ln2"], cfg.norm), lp["ffn"], cfg)
+                ks = jax.lax.dynamic_update_index_in_dim(
+                    ks, L.to_bits(ck), i, 0)
+                vs = jax.lax.dynamic_update_index_in_dim(
+                    vs, L.to_bits(cv), i, 0)
+                return (h, ks, vs), None
+
+            (h, ks, vs), _ = jax.lax.scan(
+                body, (x, L.to_bits(ks), L.to_bits(vs)),
+                (params["dec_layers"], jnp.arange(cfg.n_layers), xks, xvs))
+            caches = (L.from_bits(ks), L.from_bits(vs), xks, xvs)
+            return L.norm(h, params["dec_ln_f"], cfg.norm), caches
+
+        def body(h, lp):
+            hn = L.norm(h, lp["ln1"], cfg.norm)
+            if mode == "prefill":
+                attn, (ck, cv) = L.self_attention_with_cache(
+                    hn, lp["attn"], cfg, positions=None)
+            else:
+                attn = L.self_attention(hn, lp["attn"], cfg,
+                                        positions=None, causal=True)
+            h = h + attn
+            hc = L.norm(h, lp["ln_c"], cfg.norm)
+            xk, xv = L.encoder_kv(lp["xattn"], cfg, enc_out)
+            h = h + L.cross_attention(hc, lp["xattn"], cfg, xk, xv)
+            h = h + L.mlp(L.norm(h, lp["ln2"], cfg.norm), lp["ffn"], cfg)
+            h = shard(h, "batch", "seq", "embed")
+            if mode == "train":
+                return h, None
+            return h, (ck, cv, xk, xv)
+
+        h, caches = jax.lax.scan(
+            jax.checkpoint(body), x, params["dec_layers"])
+        return L.norm(h, params["dec_ln_f"], cfg.norm), caches
+
+    # -------------------------------------------------------------- steps
+    def loss(self, params, batch):
+        params = cast_params(params, self.cfg.compute_dtype)
+        enc_out = self.encode(params, batch["audio_embeds"])
+        x = self._embed_dec(params, batch["tokens"])
+        h, _ = self._decode_stack(params, x, enc_out, "train")
+        logits = self._logits(params, h)
+        return L.cross_entropy(logits, batch["labels"], batch.get("mask"))
+
+    def prefill(self, params, batch):
+        params = cast_params(params, self.cfg.compute_dtype)
+        enc_out = self.encode(params, batch["audio_embeds"])
+        x = self._embed_dec(params, batch["tokens"])
+        h, caches = self._decode_stack(params, x, enc_out, "prefill")
+        logits = self._logits(params, h[:, -1:])
+        return logits, caches
+
+    def decode_step(self, params, cache, tokens, pos):
+        params = cast_params(params, self.cfg.compute_dtype)
+        x = self._embed_dec(params, tokens, pos0=pos)
+        h, cache = self._decode_stack(
+            params, x, None, "decode", cache=cache, pos=pos)
+        logits = self._logits(params, h)
+        return logits, cache
+
+    def init_cache_shape(self, batch: int, max_len: int):
+        cfg = self.cfg
+        kv = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.d_head)
+        xkv = (cfg.n_layers, batch, cfg.enc_frames, cfg.n_kv_heads, cfg.d_head)
+        return (
+            jax.ShapeDtypeStruct(kv, cfg.compute_dtype),
+            jax.ShapeDtypeStruct(kv, cfg.compute_dtype),
+            jax.ShapeDtypeStruct(xkv, cfg.compute_dtype),
+            jax.ShapeDtypeStruct(xkv, cfg.compute_dtype),
+        )
+
+    def init_cache(self, batch: int, max_len: int):
+        return tuple(jnp.zeros(s.shape, s.dtype)
+                     for s in self.init_cache_shape(batch, max_len))

@@ -1,0 +1,95 @@
+"""AdamW with global-norm clipping and warmup+cosine schedule.
+
+Pure-pytree implementation (no optax dependency). Optimizer state mirrors
+the parameter tree (same shardings apply), so FSDP sharding of m/v follows
+from the parameter PartitionSpecs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    min_lr_frac: float = 0.1
+
+
+def schedule(cfg: OptimizerConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = cfg.lr * step / max(cfg.warmup_steps, 1)
+    prog = jnp.clip(
+        (step - cfg.warmup_steps) / max(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0, 1.0)
+    cos = cfg.lr * (cfg.min_lr_frac
+                    + (1 - cfg.min_lr_frac) * 0.5 * (1 + jnp.cos(math.pi * prog)))
+    return jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+class AdamW:
+    def __init__(self, cfg: OptimizerConfig | None = None) -> None:
+        self.cfg = cfg or OptimizerConfig()
+
+    def init(self, params: Any) -> dict:
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return {
+            "m": zeros,
+            "v": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def init_abstract(self, params: Any) -> dict:
+        like = jax.tree.map(
+            lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32), params)
+        return {
+            "m": like,
+            "v": jax.tree.map(
+                lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32), params),
+            "step": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+
+    def update(self, grads: Any, state: dict, params: Any):
+        cfg = self.cfg
+        step = state["step"] + 1
+        # global-norm clip in fp32
+        sq = jax.tree.reduce(
+            lambda a, g: a + jnp.sum(jnp.square(g.astype(jnp.float32))),
+            grads, jnp.zeros((), jnp.float32))
+        gnorm = jnp.sqrt(sq)
+        scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+        lr = schedule(cfg, step)
+        bc1 = 1 - cfg.b1 ** step.astype(jnp.float32)
+        bc2 = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32) * scale
+            m = cfg.b1 * m + (1 - cfg.b1) * g
+            v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+            mh = m / bc1
+            vh = v / bc2
+            delta = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+        out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+        leaves = jax.tree.leaves(out, is_leaf=lambda x: isinstance(x, tuple))
+        new_params = jax.tree.map(
+            lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(
+            lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(
+            lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        del leaves
+        return new_params, {"m": new_m, "v": new_v, "step": step}, gnorm

@@ -1,0 +1,78 @@
+"""Serving runtime: batched prefill + greedy decode with KV/state cache."""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.model import build_model
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_new_tokens: int = 32
+    greedy: bool = True
+    temperature: float = 1.0
+    seed: int = 0
+
+
+def generate(
+    model_cfg: ModelConfig,
+    batch: dict[str, Any],
+    serve: ServeConfig | None = None,
+) -> dict[str, Any]:
+    """Prefill the prompt batch, then decode ``max_new_tokens`` greedily."""
+    serve = serve or ServeConfig()
+    model = build_model(model_cfg)
+    from repro.models.params import init_tree
+    params = batch.pop("params", None)
+    if params is None:
+        params = init_tree(model.param_defs(), jax.random.PRNGKey(serve.seed),
+                           model_cfg.param_dtype)
+
+    B, T = batch["tokens"].shape
+    max_len = T + serve.max_new_tokens
+    if model_cfg.family == "vlm":
+        max_len += model_cfg.vision_patches
+
+    prefill = jax.jit(model.prefill)
+    decode = jax.jit(model.decode_step)
+
+    t0 = time.perf_counter()
+    logits, cache = prefill(params, batch)
+    # widen KV caches to max_len where the family uses positional caches
+    full = model.init_cache(B, max_len)
+    widened = []
+    for got, want in zip(cache, full):
+        if got.shape == want.shape:
+            widened.append(got)
+        else:
+            pads = [(0, w - g) for g, w in zip(got.shape, want.shape)]
+            widened.append(jnp.pad(got, pads))
+    cache = tuple(widened)
+    t_prefill = time.perf_counter() - t0
+
+    tokens = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+    out_tokens = [tokens]
+    pos0 = T if model_cfg.family != "vlm" else T + model_cfg.vision_patches
+    t1 = time.perf_counter()
+    for i in range(serve.max_new_tokens - 1):
+        logits, cache = decode(params, cache, tokens, jnp.int32(pos0 + i))
+        tokens = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+        out_tokens.append(tokens)
+    jax.block_until_ready(tokens)
+    t_decode = time.perf_counter() - t1
+
+    generated = jnp.concatenate(out_tokens, axis=1)
+    n_new = generated.shape[1]
+    return {
+        "tokens": generated,
+        "prefill_s": t_prefill,
+        "decode_s": t_decode,
+        "decode_tokens_per_s": B * n_new / t_decode if t_decode > 0 else 0.0,
+    }

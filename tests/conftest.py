@@ -1,0 +1,12 @@
+import os
+import sys
+
+# Tests must see exactly ONE device (the dry-run alone uses 512 fake
+# devices, in its own process).
+os.environ.pop("XLA_FLAGS", None)
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+
+jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,200 @@
+"""Online auto-tuner: decision policy, filtering, replacement, overheads."""
+
+import time
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    Compilette, Evaluator, OnlineAutotuner, Param, RegenerationPolicy,
+    SimulatedEvaluator, TuningAccounts, filtered_training_time, product_space,
+)
+from repro.core.profiles import ALL_PROFILES, DI_F1, SI_L1
+
+
+# --------------------------------------------------------------- decision
+@settings(max_examples=50, deadline=None)
+@given(
+    spent=st.floats(0, 10),
+    gained=st.floats(0, 100),
+    elapsed=st.floats(0.01, 1000),
+    frac=st.floats(0.001, 0.2),
+    invest=st.floats(0, 1),
+)
+def test_budget_monotonicity(spent, gained, elapsed, frac, invest):
+    pol = RegenerationPolicy(max_overhead_frac=frac, invest_frac=invest)
+    acc = TuningAccounts(app_start_s=0.0, tuning_spent_s=spent, gained_s=gained)
+    budget = pol.budget_s(acc, elapsed)
+    assert budget >= frac * elapsed - 1e-12
+    # investment can only increase the budget
+    pol0 = RegenerationPolicy(max_overhead_frac=frac, invest_frac=0.0)
+    assert budget >= pol0.budget_s(acc, elapsed) - 1e-12
+    # decision consistent with the budget
+    ok = pol.should_regenerate(acc, elapsed, 0.0)
+    assert ok == (spent <= budget)
+
+
+def test_budget_overhead_bound():
+    """If the tuner respects the policy, spent stays within budget."""
+    pol = RegenerationPolicy(max_overhead_frac=0.01, invest_frac=0.0)
+    acc = TuningAccounts(app_start_s=0.0)
+    t, spent = 100.0, 0.0
+    for _ in range(1000):
+        if pol.should_regenerate(acc, t, 0.05):
+            acc.tuning_spent_s += 0.05
+            spent += 0.05
+    assert spent <= 0.01 * t + 0.05 + 1e-9
+
+
+# --------------------------------------------------------------- filtering
+def test_filtered_training_time_robust_to_spikes():
+    seq = iter([5.0, 1.0, 1.0, 1.0, 1.0,      # warmup + group 1
+                9.0, 1.1, 1.1, 1.1, 1.1,      # group 2 w/ spike
+                1.2, 1.2, 9.9, 1.2, 1.2,
+                1.0])
+    times = iter([0.0])
+
+    calls = {"n": 0}
+
+    def fake(_x):
+        calls["n"] += 1
+        time.sleep(0)
+        return _x
+
+    # monkeypatch time_once by measuring a deterministic sequence
+    import repro.core.evaluator as ev
+
+    orig = ev.time_once
+    vals = [5.0, 1.0, 1.0, 1.0, 1.0, 9.0,
+            1.1, 1.1, 1.1, 1.1, 1.2, 1.2, 9.9, 1.2, 1.2, 1.0]
+    it = iter(vals)
+    ev.time_once = lambda fn, args: next(it)
+    try:
+        out = filtered_training_time(fake, (1,), groups=3, group_size=5, warmup=1)
+    finally:
+        ev.time_once = orig
+    # groups: [1.0,1.0,1.0,1.0,9.0] -> 1.0 ; [1.1]*4+[1.2] -> 1.1 ;
+    # [1.2,9.9,1.2,1.2,1.0] -> 1.0 ; worst of bests = 1.1
+    assert abs(out - 1.1) < 1e-9
+
+
+# ------------------------------------------------------------- end-to-end
+def make_fake_compilette(cost_fn):
+    sp = product_space([
+        Param("unroll", (1, 2, 4, 8), phase=1, switch_rank=0),
+        Param("sched", (0, 1), phase=2),
+    ])
+
+    def gen(point, **spec):
+        c = cost_fn(point)
+
+        def fn(x):
+            time.sleep(c)
+            return x
+        return fn
+
+    return Compilette("fake", sp, gen)
+
+
+def test_autotuner_finds_best_and_swaps():
+    comp = make_fake_compilette(
+        lambda p: 0.0004 / p["unroll"] + (0 if p["sched"] else 5e-5))
+    ev = Evaluator(mode="training", groups=2, group_size=3,
+                   make_args=lambda: (1,))
+    at = OnlineAutotuner(
+        comp, ev,
+        policy=RegenerationPolicy(max_overhead_frac=0.05, invest_frac=0.3),
+        wake_every=4)
+    for i in range(2000):
+        at(i)
+    s = at.stats()
+    assert s["best_point"] == {"unroll": 8, "sched": 1}
+    assert s["swaps"] >= 1
+    assert s["active_score_s"] <= s["reference_score_s"]
+
+
+def test_autotuner_negligible_overhead_when_no_gain():
+    """Paper: overhead bounded even when tuning finds nothing better."""
+    comp = make_fake_compilette(lambda p: 0.0008)  # all variants equal
+    ev = Evaluator(mode="training", groups=1, group_size=2,
+                   make_args=lambda: (1,))
+    at = OnlineAutotuner(
+        comp, ev,
+        policy=RegenerationPolicy(max_overhead_frac=0.02, invest_frac=0.1),
+        wake_every=2)
+    for i in range(300):
+        at(i)
+    s = at.stats()
+    # measurement noise may cause an occasional swap between equal variants
+    # (the paper's "oscillations can lead to wrong replacement" remark);
+    # the bound that matters is the overhead budget.
+    assert s["overhead_frac"] < 0.05   # 2% target + estimation slack
+
+
+def test_autotuner_generation_failure_is_hole():
+    def gen_cost(p):
+        if p["unroll"] == 4:
+            raise RuntimeError("cannot generate")
+        return 0.0002
+
+    sp = product_space([Param("unroll", (1, 2, 4, 8), phase=1)])
+
+    def gen(point, **spec):
+        c = gen_cost(point)
+
+        def fn(x):
+            time.sleep(c)
+            return x
+        return fn
+
+    comp = Compilette("failing", sp, gen)
+    ev = Evaluator(mode="training", groups=1, group_size=2,
+                   make_args=lambda: (1,))
+    # unbounded budget: this test is about hole handling, not pacing
+    at = OnlineAutotuner(comp, ev,
+                         policy=RegenerationPolicy(100.0, 0.0), wake_every=1)
+    at.exhaust()
+    s = at.stats()
+    assert s["exploration_finished"]
+    assert (s["best_point"] or {}).get("unroll") != 4
+
+
+def test_threaded_mode_swaps_safely():
+    comp = make_fake_compilette(lambda p: 0.0005 / p["unroll"])
+    ev = Evaluator(mode="training", groups=1, group_size=2,
+                   make_args=lambda: (1,))
+    at = OnlineAutotuner(comp, ev,
+                         policy=RegenerationPolicy(0.9, 0.9), wake_every=10**9)
+    at.start_thread(wake_period_s=0.0005)
+    for i in range(300):
+        at(i)
+    at.stop_thread()
+    s = at.stats()
+    assert s["regenerations"] > 0
+
+
+# -------------------------------------------------------------- simulated
+def test_simulated_profiles_prefer_different_points():
+    """Lean cores should demand more unrolling than fat cores (paper §5.4)."""
+    from repro.kernels.matmul.ops import make_matmul_compilette
+
+    comp = make_matmul_compilette(1024, 1024, 1024)
+    from repro.core import TwoPhaseExplorer
+
+    best = {}
+    for prof in (SI_L1, DI_F1):
+        ex = TwoPhaseExplorer(comp.space)
+        pt, _ = ex.run_to_completion(lambda p: comp.simulate(p, prof))
+        best[prof.name] = pt
+    assert best["SI-L1"]["unroll"] >= best["DI-F1"]["unroll"]
+
+
+def test_all_profiles_give_finite_best():
+    from repro.kernels.euclid.ops import make_euclid_compilette
+    from repro.core import TwoPhaseExplorer
+
+    comp = make_euclid_compilette(512, 64, 64)
+    for prof in ALL_PROFILES:
+        ex = TwoPhaseExplorer(comp.space)
+        pt, score = ex.run_to_completion(lambda p: comp.simulate(p, prof))
+        assert pt is not None and score < float("inf"), prof.name

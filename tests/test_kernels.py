@@ -1,0 +1,219 @@
+"""Per-kernel allclose sweeps against the pure-jnp oracles.
+
+Each Pallas kernel (interpret mode) and each jnp program variant is swept
+over shapes/dtypes and random tuning points drawn from its own space.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.attention.ops import (
+    attention_ref, decode_attention, flash_attention_jnp,
+    flash_attention_pallas)
+from repro.kernels.euclid.ops import (
+    euclid_pallas, euclid_ref, generate_jnp_variant as euclid_variant,
+    make_space as euclid_space, reference_simd, reference_sisd)
+from repro.kernels.lintra.ops import (
+    generate_jnp_variant as lintra_variant, lintra_pallas, lintra_ref)
+from repro.kernels.matmul.ops import matmul_ref, make_space, tuned_matmul
+
+KEY = jax.random.PRNGKey(0)
+
+
+def rand(shape, dtype=jnp.float32, key=KEY):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+# ------------------------------------------------------------------ matmul
+@pytest.mark.parametrize("shape", [(128, 128, 128), (192, 320, 256),
+                                   (256, 128, 448), (64, 512, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_matmul_shapes_dtypes(shape, dtype):
+    M, K, N = shape
+    a = rand((M, K), dtype)
+    b = rand((K, N), dtype, jax.random.PRNGKey(1))
+    ref = matmul_ref(a, b)
+    for pt in [
+        dict(block_m=64, block_n=128, block_k=128, unroll=1, order="mn",
+             scratch=1, lookahead=0),
+        dict(block_m=128, block_n=128, block_k=128, unroll=2, order="nm",
+             scratch=0, lookahead=1),
+        dict(block_m=64, block_n=128, block_k=256, unroll=4, order="mn",
+             scratch=1, lookahead=2),
+    ]:
+        out = tuned_matmul(a, b, point=pt)
+        tol = 1e-4 if dtype == jnp.float32 else 2e-2
+        np.testing.assert_allclose(out, ref, rtol=tol, atol=tol)
+
+
+@settings(max_examples=12, deadline=None)
+@given(idx=st.integers(0, 10**6))
+def test_matmul_random_valid_points(idx):
+    M, K, N = 192, 256, 256
+    space = make_space(M, N, K)
+    pts = list(space.iter_valid())
+    pt = pts[idx % len(pts)]
+    a = rand((M, K))
+    b = rand((K, N), key=jax.random.PRNGKey(1))
+    np.testing.assert_allclose(
+        tuned_matmul(a, b, point=pt), matmul_ref(a, b), rtol=1e-4, atol=1e-4)
+
+
+# ------------------------------------------------------------------ euclid
+@pytest.mark.parametrize("n,m,d", [(128, 32, 32), (250, 90, 70), (64, 64, 128)])
+def test_euclid_pallas_and_jnp(n, m, d):
+    x = rand((n, d))
+    c = rand((m, d), key=jax.random.PRNGKey(2))
+    ref = euclid_ref(x, c)
+    for pt in [
+        dict(block_n=64, block_m=32, block_d=32, unroll=1, vectorize=1,
+             order="nm", scratch=1, lookahead=0),
+        dict(block_n=128, block_m=32, block_d=16, unroll=2, vectorize=0,
+             order="mn", scratch=0, lookahead=1),
+    ]:
+        if pt["block_d"] > d:
+            continue
+        np.testing.assert_allclose(
+            euclid_pallas(x, c, pt), ref, rtol=1e-3, atol=1e-3)
+        np.testing.assert_allclose(
+            euclid_variant(pt, dim=d)(x, c), ref, rtol=1e-3, atol=1e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(idx=st.integers(0, 10**6))
+def test_euclid_random_points_vs_oracle(idx):
+    n, m, d = 256, 64, 64
+    space = euclid_space(n, m, d)
+    pts = list(space.iter_valid())
+    pt = pts[idx % len(pts)]
+    x = rand((n, d))
+    c = rand((m, d), key=jax.random.PRNGKey(2))
+    np.testing.assert_allclose(
+        euclid_variant(pt, dim=d)(x, c), euclid_ref(x, c),
+        rtol=1e-3, atol=1e-3)
+
+
+def test_euclid_references_agree():
+    x = rand((128, 96))
+    c = rand((48, 96), key=jax.random.PRNGKey(3))
+    np.testing.assert_allclose(
+        reference_sisd(96)(x, c), reference_simd(96)(x, c),
+        rtol=1e-3, atol=1e-3)
+
+
+# ------------------------------------------------------------------ lintra
+@pytest.mark.parametrize("h,w,bands", [(64, 100, 3), (120, 200, 3), (33, 50, 4)])
+def test_lintra_variants(h, w, bands):
+    img = rand((h, w, bands))
+    a = jnp.arange(1.0, bands + 1)
+    b = jnp.linspace(-1, 1, bands)
+    ref = lintra_ref(img, a, b)
+    fold = img.reshape(h, w * bands)
+    ab = jnp.stack([jnp.tile(a, w), jnp.tile(b, w)])
+    for pt in [
+        dict(block_h=8, block_w=128, unroll=1, vectorize=1, order="hw",
+             scratch=1, lookahead=0),
+        dict(block_h=32, block_w=256, unroll=2, vectorize=0, order="wh",
+             scratch=0, lookahead=2),
+    ]:
+        if pt["block_h"] > h:
+            continue
+        np.testing.assert_allclose(
+            lintra_pallas(fold, ab, pt).reshape(h, w, bands), ref,
+            rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(
+            lintra_variant(pt, bands=bands, width=w)(img, a, b), ref,
+            rtol=1e-5, atol=1e-5)
+
+
+# --------------------------------------------------------------- attention
+@pytest.mark.parametrize("T,H,Hk,Dh", [(128, 4, 4, 32), (192, 8, 2, 32),
+                                       (96, 6, 3, 64)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_vs_ref(T, H, Hk, Dh, causal):
+    B = 2
+    q = rand((B, T, H, Dh))
+    k = rand((B, T, Hk, Dh), key=jax.random.PRNGKey(4))
+    v = rand((B, T, Hk, Dh), key=jax.random.PRNGKey(5))
+    ref = attention_ref(q, k, v, causal=causal)
+    out = flash_attention_jnp(q, k, v, causal=causal, q_chunk=64, k_chunk=48)
+    np.testing.assert_allclose(out, ref, rtol=2e-3, atol=2e-3)
+    outp = flash_attention_pallas(
+        q, k, v, dict(block_q=64, block_kv=64), causal=causal)
+    np.testing.assert_allclose(outp, ref, rtol=2e-3, atol=2e-3)
+
+
+def test_flash_attention_window_and_offset():
+    B, T, H, Hk, Dh = 1, 160, 4, 2, 32
+    q = rand((B, 32, H, Dh))
+    k = rand((B, T, Hk, Dh), key=jax.random.PRNGKey(4))
+    v = rand((B, T, Hk, Dh), key=jax.random.PRNGKey(5))
+    ref = attention_ref(q, k, v, causal=True, q_offset=128, window=64)
+    out = flash_attention_jnp(q, k, v, causal=True, q_offset=128, window=64,
+                              q_chunk=16, k_chunk=32)
+    np.testing.assert_allclose(out, ref, rtol=2e-3, atol=2e-3)
+
+
+def test_flash_attention_grad_matches_ref():
+    B, T, H, Hk, Dh = 2, 96, 4, 2, 16
+    q = rand((B, T, H, Dh))
+    k = rand((B, T, Hk, Dh), key=jax.random.PRNGKey(4))
+    v = rand((B, T, Hk, Dh), key=jax.random.PRNGKey(5))
+    g1 = jax.grad(lambda q: flash_attention_jnp(
+        q, k, v, causal=True, q_chunk=32, k_chunk=32).sum())(q)
+    g2 = jax.grad(lambda q: attention_ref(q, k, v, causal=True).sum())(q)
+    np.testing.assert_allclose(g1, g2, rtol=5e-3, atol=5e-3)
+
+
+def test_decode_attention_chunked_vs_ref():
+    B, T, H, Hk, Dh = 2, 160, 8, 2, 32
+    q = rand((B, 1, H, Dh))
+    k = rand((B, T, Hk, Dh), key=jax.random.PRNGKey(4))
+    v = rand((B, T, Hk, Dh), key=jax.random.PRNGKey(5))
+    for length in (64, 100, 160):
+        ref = attention_ref(q, k[:, :length], v[:, :length], causal=False)
+        out = decode_attention(q, k, v, length=length, k_chunk=32)
+        np.testing.assert_allclose(out, ref, rtol=2e-3, atol=2e-3)
+
+
+def test_attention_bf16_stability():
+    B, T, H, Hk, Dh = 2, 128, 4, 2, 32
+    q = rand((B, T, H, Dh), jnp.bfloat16)
+    k = rand((B, T, Hk, Dh), jnp.bfloat16, jax.random.PRNGKey(4))
+    v = rand((B, T, Hk, Dh), jnp.bfloat16, jax.random.PRNGKey(5))
+    out = flash_attention_jnp(q, k, v, causal=True, q_chunk=64, k_chunk=64)
+    assert out.dtype == jnp.bfloat16
+    ref = attention_ref(q.astype(jnp.float32), k.astype(jnp.float32),
+                        v.astype(jnp.float32), causal=True)
+    np.testing.assert_allclose(out.astype(jnp.float32), ref,
+                               rtol=5e-2, atol=5e-2)
+
+
+# ------------------------------------------------------------------ rmsnorm
+@pytest.mark.parametrize("n,d", [(64, 128), (100, 256), (256, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_kernel_vs_ref(n, d, dtype):
+    from repro.kernels.rmsnorm.ops import rmsnorm_pallas, rmsnorm_ref
+    x = rand((n, d), dtype)
+    w = rand((d,), jnp.float32, jax.random.PRNGKey(9))
+    ref = rmsnorm_ref(x, w)
+    for rows in (8, 32, 128):
+        out = rmsnorm_pallas(x, w, dict(block_rows=rows))
+        tol = 1e-5 if dtype == jnp.float32 else 2e-2
+        np.testing.assert_allclose(
+            out.astype(jnp.float32), ref.astype(jnp.float32),
+            rtol=tol, atol=tol)
+
+
+def test_rmsnorm_profiles_prefer_larger_rows_when_lean():
+    from repro.core import TwoPhaseExplorer
+    from repro.core.profiles import SI_L1, TI_F3
+    from repro.kernels.rmsnorm.ops import make_rmsnorm_compilette
+    comp = make_rmsnorm_compilette(4096, 4096)
+    for prof in (SI_L1, TI_F3):
+        ex = TwoPhaseExplorer(comp.space)
+        pt, sc = ex.run_to_completion(lambda p: comp.simulate(p, prof))
+        assert pt is not None and sc < float("inf")

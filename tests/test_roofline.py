@@ -1,0 +1,81 @@
+"""Roofline derivation: HLO collective parsing + term math."""
+
+import pytest
+
+from repro.distributed.roofline import (
+    Roofline, collective_stats, roofline_from)
+
+HLO = """
+HloModule test
+%all-reduce = f32[128,64]{1,0} all-reduce(%dot), channel_id=1, replica_groups={{0,4},{1,5},{2,6},{3,7}}, use_global_device_ids=true
+%ag = bf16[256,64]{1,0} all-gather(%p0), channel_id=2, replica_groups=[2,16]<=[32], dimensions={0}
+%rs = f32[16,64]{1,0} reduce-scatter(%p1), channel_id=3, replica_groups=[1,8]<=[8], dimensions={0}
+%a2a = bf16[64,64]{1,0} all-to-all(%p2), channel_id=4, replica_groups=[4,4]<=[16]
+%cp = f32[32]{0} collective-permute(%p3), channel_id=5, source_target_pairs={{0,1}}
+%ars = f32[8,8]{1,0} all-reduce-start(%x), channel_id=6, replica_groups={{0,1}}
+%ard = f32[8,8]{1,0} all-reduce-done(%ars)
+"""
+
+
+def test_collective_parse_ops_and_groups():
+    st = collective_stats(HLO)
+    assert st.n_ops["all-reduce"] == 2          # plain + -start (not -done)
+    assert st.n_ops["all-gather"] == 1
+    assert st.n_ops["reduce-scatter"] == 1
+    assert st.n_ops["all-to-all"] == 1
+    assert st.n_ops["collective-permute"] == 1
+
+
+def test_collective_traffic_model():
+    st = collective_stats(HLO)
+    # all-reduce: 2 * out * (g-1)/g with g=2 → 128*64*4 = 32768 bytes out
+    ar = 2 * (128 * 64 * 4) * 0.5 + 2 * (8 * 8 * 4) * 0.5
+    assert st.per_op_bytes["all-reduce"] == pytest.approx(ar)
+    # all-gather: out*(g-1)/g, g=16, bf16
+    ag = (256 * 64 * 2) * 15 / 16
+    assert st.per_op_bytes["all-gather"] == pytest.approx(ag)
+    # reduce-scatter: out*(g-1), g=8
+    rs = (16 * 64 * 4) * 7
+    assert st.per_op_bytes["reduce-scatter"] == pytest.approx(rs)
+
+
+def test_roofline_terms_and_bound():
+    cost = {"flops": 197e12, "bytes accessed": 819e9 * 2}  # 1 s vs 2 s
+    roof = roofline_from(cost, HLO, n_chips=256, model_flops=197e12 * 256 * 0.5)
+    assert roof.compute_s == pytest.approx(1.0)
+    assert roof.memory_s == pytest.approx(2.0)
+    assert roof.bound == "memory"
+    assert roof.useful_ratio == pytest.approx(0.5)
+    assert roof.roofline_frac == pytest.approx(0.25)  # 0.5s ideal / 2s
+
+
+def test_model_flops_formulas():
+    from repro.configs import REGISTRY
+    from repro.configs.base import TRAIN_4K, DECODE_32K
+    from repro.launch.shapes import model_flops
+
+    cfg = REGISTRY["deepseek-7b"]
+    mf = model_flops(cfg, TRAIN_4K)
+    base = 6.0 * cfg.n_params() * TRAIN_4K.global_batch * TRAIN_4K.seq_len
+    assert mf > base  # attention term adds on top
+    assert mf < base * 1.5
+
+    moe = REGISTRY["qwen3-moe-30b-a3b"]
+    assert moe.n_active_params() < 0.2 * moe.n_params()  # 3B active of 30B
+
+    dec = model_flops(cfg, DECODE_32K)
+    assert dec < mf / 1000  # one token vs a full batch of sequences
+
+
+def test_skip_matrix():
+    from repro.configs import REGISTRY
+    from repro.configs.base import LONG_500K, TRAIN_4K
+    from repro.launch.shapes import skip_reason
+
+    skipped = [a for a in REGISTRY
+               if skip_reason(REGISTRY[a], LONG_500K) is not None]
+    assert sorted(skipped) == sorted([
+        "llama4-scout-17b-a16e", "qwen3-moe-30b-a3b", "command-r-35b",
+        "deepseek-coder-33b", "qwen2.5-32b", "deepseek-7b", "qwen2-vl-7b",
+        "whisper-tiny"])
+    assert all(skip_reason(REGISTRY[a], TRAIN_4K) is None for a in REGISTRY)

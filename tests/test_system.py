@@ -1,0 +1,117 @@
+"""End-to-end system behaviour: the paper's full pipeline in miniature.
+
+Runs the online auto-tuner on the two case-study kernels on the REAL
+backend (XLA:CPU machine-code variants), checks paper-shaped claims:
+positive speedup direction, bounded overhead, online result close to the
+static optimum.
+"""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (
+    Evaluator, OnlineAutotuner, RegenerationPolicy, TwoPhaseExplorer,
+    static_autotune)
+from repro.kernels.euclid.ops import (
+    make_euclid_compilette, reference_sisd)
+from repro.kernels.lintra.ops import (
+    make_lintra_compilette, reference_sisd as lintra_ref_sisd)
+
+
+@pytest.fixture(scope="module")
+def euclid_inputs():
+    N, M, D = 512, 64, 64
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (N, D), jnp.float32)
+    c = jax.random.normal(jax.random.PRNGKey(1), (M, D), jnp.float32)
+    return N, M, D, x, c
+
+
+def test_online_autotune_euclid_end_to_end(euclid_inputs):
+    N, M, D, x, c = euclid_inputs
+    comp = make_euclid_compilette(N, M, D, backend="jnp")
+    ev = Evaluator(mode="training", groups=2, group_size=3,
+                   make_args=lambda: (x, c))
+    ref = reference_sisd(D)
+    # generous budget: this test checks the mechanism (swap correctness),
+    # not pacing; CI hosts can be heavily loaded.
+    at = OnlineAutotuner(
+        comp, ev, policy=RegenerationPolicy(5.0, 0.9),
+        specialization={"dim": D}, reference_fn=jax.jit(ref), wake_every=1)
+    for i in range(60):
+        at(x, c)
+    s = at.stats()
+    assert s["regenerations"] > 5
+    # the tuner must never activate a slower-than-reference kernel
+    assert s["active_score_s"] <= s["reference_score_s"] * 1.05
+    # correctness of the tuned kernel
+    import numpy as np
+    from repro.kernels.euclid.ops import euclid_ref
+    np.testing.assert_allclose(at.active_fn(x, c), euclid_ref(x, c),
+                               rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.flaky(reruns=2)
+def test_online_close_to_static_optimum(euclid_inputs):
+    """Paper: online lands within ~6 % of the best static variant. Timing
+    noise on a loaded shared CPU can spread independent measurements of the
+    same variant by >2x, so the asserted bound is deliberately loose; the
+    benchmark harness (table3) reports the measured gap."""
+    N, M, D, x, c = euclid_inputs
+    comp = make_euclid_compilette(N, M, D, backend="jnp")
+    ev = Evaluator(mode="training", groups=2, group_size=3,
+                   make_args=lambda: (x, c))
+
+    at = OnlineAutotuner(comp, ev, policy=RegenerationPolicy(0.9, 0.9),
+                         specialization={"dim": D}, wake_every=1)
+    at.exhaust(max_wakes=80)
+    online_best = at.explorer.best_score
+
+    best_pt, best_score, hist = static_autotune(
+        comp, ev, specialization={"dim": D}, only_no_leftover=True,
+        max_points=40)
+    assert online_best <= best_score * 3.0
+
+
+def test_lintra_memory_bound_overhead_negligible():
+    H, W, bands = 128, 200, 3
+    img = jax.random.normal(jax.random.PRNGKey(0), (H, W, bands))
+    a = jnp.array([1.5, 0.5, 2.0])
+    b = jnp.array([0.1, -0.2, 0.3])
+    comp = make_lintra_compilette(H, W, bands, backend="jnp")
+    ev = Evaluator(mode="training", groups=1, group_size=3,
+                   make_args=lambda: (img, a, b))
+    at = OnlineAutotuner(
+        comp, ev, policy=RegenerationPolicy(max_overhead_frac=0.05,
+                                            invest_frac=0.1),
+        specialization={"bands": bands, "width": W},
+        reference_fn=jax.jit(lintra_ref_sisd(bands, W)), wake_every=2)
+    for _ in range(200):
+        at(img, a, b)
+    s = at.stats()
+    # overhead bounded even if nothing better is found (paper's claim).
+    # The bound is loose because the first regeneration is admitted before
+    # any cost estimate exists (cold start) and CI hosts run loaded.
+    assert s["overhead_frac"] < 0.6
+    import numpy as np
+    from repro.kernels.lintra.ops import lintra_ref
+    np.testing.assert_allclose(at.active_fn(img, a, b),
+                               lintra_ref(img, a, b), rtol=1e-4, atol=1e-4)
+
+
+def test_two_phase_explores_fewer_than_full_space(euclid_inputs):
+    """Paper Table 4: two-phase exploration visits far fewer variants than
+    the full space in one run."""
+    N, M, D, x, c = euclid_inputs
+    comp = make_euclid_compilette(N, M, D)
+    full = comp.space.n_valid_variants()
+    ex = TwoPhaseExplorer(comp.space)
+    n = 0
+    while True:
+        pt = ex.next_point()
+        if pt is None:
+            break
+        ex.report(pt, 1.0)
+        n += 1
+    assert n < full / 2, (n, full)

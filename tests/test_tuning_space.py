@@ -1,0 +1,127 @@
+"""Tuning space + two-phase explorer: unit + property tests."""
+
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import Param, TwoPhaseExplorer, TuningSpace, product_space
+
+
+def space_2p(validator=lambda p: True, no_leftover=lambda p: True):
+    return TuningSpace(
+        params=(
+            Param("hotUF", (1, 2, 4), phase=1, switch_rank=0),
+            Param("coldUF", (1, 2, 4, 8), phase=1, switch_rank=1),
+            Param("vectLen", (1, 2, 4), phase=1, switch_rank=2),
+            Param("IS", (0, 1), phase=2),
+            Param("SM", (0, 1), phase=2),
+        ),
+        validator=validator,
+        no_leftover=no_leftover,
+    )
+
+
+def test_eq1_variant_count():
+    sp = space_2p()
+    # Eq. (1): product of range sizes
+    assert sp.n_code_variants == 3 * 4 * 3 * 2 * 2
+
+
+def test_holes_reduce_valid_count():
+    sp = space_2p(validator=lambda p: p["hotUF"] * p["vectLen"] <= 4)
+    assert sp.n_valid_variants() < sp.n_code_variants
+    for point in sp.iter_valid():
+        assert point["hotUF"] * point["vectLen"] <= 4
+
+
+def test_phase1_order_least_to_most_switched():
+    sp = space_2p()
+    pts = list(sp.iter_phase1(sp.default_point()))
+    # least-switched param (hotUF) changes slowest
+    hot = [p["hotUF"] for p in pts]
+    assert hot == sorted(hot)
+
+
+def test_explorer_two_phases_and_dedup():
+    sp = space_2p()
+    ex = TwoPhaseExplorer(sp)
+    seen = set()
+    n = 0
+    while True:
+        pt = ex.next_point()
+        if pt is None:
+            break
+        key = sp.key(pt)
+        assert key not in seen
+        seen.add(key)
+        n += 1
+        ex.report(pt, float(n))  # first point stays best
+    # phase1 grid (36) + phase2 combos of the best (4, one dup) = 39
+    assert n == 36 + 3
+    assert ex.finished
+
+
+def test_explorer_leftover_free_first():
+    sp = space_2p(no_leftover=lambda p: p["coldUF"] <= 2)
+    ex = TwoPhaseExplorer(sp)
+    ranks = []
+    while True:
+        pt = ex.next_point()
+        if pt is None or ex.state.phase == 2:
+            break
+        ranks.append(0 if pt["coldUF"] <= 2 else 1)
+        ex.report(pt, 1.0)
+    # all leftover-free points precede leftover ones
+    assert ranks == sorted(ranks)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    costs=st.dictionaries(
+        st.tuples(st.sampled_from([1, 2, 4]), st.sampled_from([1, 2, 4, 8])),
+        st.floats(0.001, 1.0),
+        min_size=1,
+    )
+)
+def test_explorer_finds_global_minimum_property(costs):
+    """The explorer's best equals the true minimum over visited points."""
+    sp = TuningSpace(params=(
+        Param("a", (1, 2, 4), phase=1, switch_rank=0),
+        Param("b", (1, 2, 4, 8), phase=1, switch_rank=1),
+    ))
+
+    def cost(p):
+        return costs.get((p["a"], p["b"]), 0.5)
+
+    ex = TwoPhaseExplorer(sp)
+    best, score = ex.run_to_completion(cost)
+    all_costs = [cost(p) for p in sp.iter_valid()]
+    assert math.isclose(score, min(all_costs), rel_tol=1e-9)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31))
+def test_explorer_never_proposes_holes(seed):
+    import random
+
+    rng = random.Random(seed)
+    banned = {(a, b) for a in (1, 2, 4) for b in (1, 2, 4, 8)
+              if rng.random() < 0.4}
+    # keep at least one valid point
+    if len(banned) == 12:
+        banned.pop()
+    sp = TuningSpace(
+        params=(
+            Param("a", (1, 2, 4), phase=1, switch_rank=0),
+            Param("b", (1, 2, 4, 8), phase=1, switch_rank=1),
+        ),
+        validator=lambda p: (p["a"], p["b"]) not in banned,
+    )
+    ex = TwoPhaseExplorer(sp)
+    while True:
+        pt = ex.next_point()
+        if pt is None:
+            break
+        assert (pt["a"], pt["b"]) not in banned
+        ex.report(pt, 1.0)
