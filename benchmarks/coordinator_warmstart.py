@@ -1,0 +1,127 @@
+"""Cold-start vs warm-start time-to-best under the TuningCoordinator.
+
+Two measurements per scenario, both fully deterministic on the
+VirtualClock (simulated seconds, so numbers are reproducible anywhere):
+
+  * regenerations-to-best — how many generate+evaluate cycles before the
+    process is *running* its best-known variant;
+  * time-to-best — simulated wall time from process start to that swap,
+    including all kernel calls and tuning overhead.
+
+The cold process explores the space from scratch; the warm process loads
+the registry the cold one persisted and re-validates the stored best with
+a single regeneration. A multi-kernel scenario shows the same effect when
+one shared budget serves several kernels at once.
+
+    PYTHONPATH=src python benchmarks/coordinator_warmstart.py
+"""
+
+import os
+import sys
+import tempfile
+
+sys.path.insert(0, "src")
+sys.path.insert(0, os.path.dirname(__file__))
+
+from common import save, table
+
+from repro.core import (
+    Compilette, Param, RegenerationPolicy, VirtualClock,
+    VirtualClockEvaluator, product_space, virtual_kernel,
+)
+from repro.runtime.coordinator import TuningCoordinator
+
+DEVICE = "bench:virtual"
+
+
+def make_kernel_suite(clock, n_kernels: int):
+    """n kernels with distinct cost landscapes over an 8x2 point space."""
+    suite = []
+    for k in range(n_kernels):
+        base = 0.004 * (k + 1)
+
+        def cost_fn(p, base=base):
+            return base / p["unroll"] + (0 if p["sched"] else base / 8)
+
+        sp = product_space([
+            Param("unroll", (1, 2, 4, 8), phase=1, switch_rank=0),
+            Param("sched", (0, 1), phase=2),
+        ])
+
+        def gen(point, _cost_fn=cost_fn, **spec):
+            return virtual_kernel(clock, _cost_fn(point))
+
+        suite.append((f"kernel{k}", Compilette(f"kernel{k}", sp, gen), base,
+                      {"unroll": 8, "sched": 1}))
+    return suite
+
+
+def run_process(registry_path, n_kernels: int, calls: int = 6000):
+    """Simulate one process lifetime; return per-kernel time-to-best."""
+    clock = VirtualClock()
+    ev = VirtualClockEvaluator(clock)
+    coord = TuningCoordinator(
+        policy=RegenerationPolicy(max_overhead_frac=0.05, invest_frac=0.5),
+        registry_path=registry_path, device=DEVICE, clock=clock)
+    managed = []
+    for name, comp, base, best in make_kernel_suite(clock, n_kernels):
+        m = coord.register(name, comp, ev,
+                           reference_fn=virtual_kernel(clock, base))
+        managed.append((m, best))
+
+    to_best = {m.name: None for m, _ in managed}
+    regens_at_best = {m.name: None for m, _ in managed}
+    for i in range(calls):
+        for m, best in managed:
+            m(i)
+            if to_best[m.name] is None and m.tuner._active_life.point == best:
+                to_best[m.name] = clock()
+                regens_at_best[m.name] = m.tuner.accounts.regenerations
+        coord.maybe_pump()
+    coord.save_registry()
+    stats = coord.stats()
+    return {
+        "time_to_best_s": to_best,
+        "regens_to_best": regens_at_best,
+        "total_regens": stats["regenerations"],
+        "overhead_frac": stats["overhead_frac"],
+        "warm": [m.warm_started for m, _ in managed],
+        "wall_s": clock(),
+    }
+
+
+def main() -> None:
+    rows = []
+    for n_kernels in (1, 4):
+        with tempfile.TemporaryDirectory() as d:
+            path = os.path.join(d, "tuned.json")
+            cold = run_process(path, n_kernels)
+            warm = run_process(path, n_kernels)
+        for phase, r in (("cold", cold), ("warm", warm)):
+            ttb = [v for v in r["time_to_best_s"].values() if v is not None]
+            rtb = [v for v in r["regens_to_best"].values() if v is not None]
+            rows.append({
+                "kernels": n_kernels,
+                "start": phase,
+                "reached_best": f"{len(ttb)}/{n_kernels}",
+                "regens_to_best(max)": max(rtb) if rtb else None,
+                "time_to_best_s(max)": max(ttb) if ttb else None,
+                "total_regens": r["total_regens"],
+                "overhead_%": 100 * r["overhead_frac"],
+            })
+    print(table(rows, ["kernels", "start", "reached_best",
+                       "regens_to_best(max)", "time_to_best_s(max)",
+                       "total_regens", "overhead_%"],
+                title="coordinator cold vs warm start (virtual seconds)"))
+    save("coordinator_warmstart", rows)
+
+    cold1 = next(r for r in rows if r["kernels"] == 1 and r["start"] == "cold")
+    warm1 = next(r for r in rows if r["kernels"] == 1 and r["start"] == "warm")
+    speedup = cold1["time_to_best_s(max)"] / warm1["time_to_best_s(max)"]
+    print(f"\nwarm start reaches best {speedup:.1f}x sooner "
+          f"({warm1['regens_to_best(max)']} vs "
+          f"{cold1['regens_to_best(max)']} regenerations)")
+
+
+if __name__ == "__main__":
+    main()

@@ -2,6 +2,11 @@
 any assigned architecture (reduced config so it runs on CPU).
 
     PYTHONPATH=src python examples/serve_lm.py --arch rwkv6-1.6b --tokens 32
+
+With ``--autotune`` the prefill/decode step-programs are tuned online by
+the process-wide TuningCoordinator while the request streams tokens;
+``--requests N`` sends N requests through the same coordinator so tuning
+pays off across requests (warm variants, no re-exploration).
 """
 
 import argparse
@@ -14,7 +19,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import REGISTRY
-from repro.runtime.serve_loop import ServeConfig, generate
+from repro.runtime.serve_loop import (
+    ServeConfig, generate, make_serve_coordinator)
 
 
 def main() -> None:
@@ -23,28 +29,44 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--tokens", type=int, default=32)
+    ap.add_argument("--autotune", action="store_true")
+    ap.add_argument("--requests", type=int, default=1)
+    ap.add_argument("--registry", default=None)
     args = ap.parse_args()
 
     cfg = REGISTRY[args.arch].reduced()
-    batch = {
-        "tokens": jax.random.randint(
-            jax.random.PRNGKey(0), (args.batch, args.prompt_len), 0, cfg.vocab)
-    }
-    if cfg.family == "encdec":
-        batch["audio_embeds"] = jax.random.normal(
-            jax.random.PRNGKey(1), (args.batch, cfg.enc_frames, cfg.d_model)) * 0.05
-    if cfg.family == "vlm":
-        batch["vision"] = jax.random.normal(
-            jax.random.PRNGKey(1), (args.batch, 16, cfg.d_model)) * 0.05
+    serve = ServeConfig(max_new_tokens=args.tokens, autotune=args.autotune,
+                        tune_max_overhead=0.2, registry_path=args.registry)
+    coordinator = make_serve_coordinator(serve) if args.autotune else None
 
-    t0 = time.perf_counter()
-    out = generate(cfg, batch, ServeConfig(max_new_tokens=args.tokens))
-    print(f"arch={args.arch} (reduced)  batch={args.batch}")
-    print(f"prefill {out['prefill_s']*1e3:.0f} ms   "
-          f"decode {out['decode_s']*1e3:.0f} ms   "
-          f"{out['decode_tokens_per_s']:.1f} tok/s   "
-          f"total {time.perf_counter()-t0:.1f}s")
-    print("first sequence:", out["tokens"][0].tolist())
+    for req in range(args.requests):
+        batch = {
+            "tokens": jax.random.randint(
+                jax.random.PRNGKey(req), (args.batch, args.prompt_len),
+                0, cfg.vocab)
+        }
+        if cfg.family == "encdec":
+            batch["audio_embeds"] = jax.random.normal(
+                jax.random.PRNGKey(1),
+                (args.batch, cfg.enc_frames, cfg.d_model)) * 0.05
+        if cfg.family == "vlm":
+            batch["vision"] = jax.random.normal(
+                jax.random.PRNGKey(1), (args.batch, 16, cfg.d_model)) * 0.05
+
+        t0 = time.perf_counter()
+        out = generate(cfg, batch, serve, coordinator=coordinator)
+        print(f"req {req}  arch={args.arch} (reduced)  batch={args.batch}")
+        print(f"  prefill {out['prefill_s']*1e3:.0f} ms   "
+              f"decode {out['decode_s']*1e3:.0f} ms   "
+              f"{out['decode_tokens_per_s']:.1f} tok/s   "
+              f"total {time.perf_counter()-t0:.1f}s")
+        if args.autotune:
+            a = out["autotune"]
+            print(f"  tuning: {a['regenerations']} regens {a['swaps']} swaps "
+                  f"overhead {a['overhead_frac']*100:.1f}% "
+                  f"(budget {a['budget_s']*1e3:.0f} ms)")
+    if args.requests > 0:
+        print("first sequence:", out["tokens"][0].tolist())
 
 
 if __name__ == "__main__":

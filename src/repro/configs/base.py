@@ -55,6 +55,7 @@ class ModelConfig:
     remat: str = "dots"            # none | dots | full
     attn_q_chunk: int = 512    # §Perf H8b: larger chunks cut kv re-reads
     attn_k_chunk: int = 1024
+    decode_k_chunk: int = 4096     # flash-decoding KV-chunk (serve tuning)
     scan_chunk: int = 128          # rwkv/ssm chunk length
     attn_impl: str = "chunked"     # chunked | ref | pallas
     attn_scores_f32: bool = True   # False: bf16 score blocks (models the

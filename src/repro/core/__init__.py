@@ -10,8 +10,11 @@ from repro.core.evaluator import (
     Evaluator,
     Measurement,
     SimulatedEvaluator,
+    VirtualClock,
+    VirtualClockEvaluator,
     filtered_training_time,
     mean_real_time,
+    virtual_kernel,
 )
 from repro.core.explorer import TwoPhaseExplorer
 from repro.core.persistence import TunedRegistry
@@ -28,8 +31,11 @@ __all__ = [
     "Evaluator",
     "Measurement",
     "SimulatedEvaluator",
+    "VirtualClock",
+    "VirtualClockEvaluator",
     "filtered_training_time",
     "mean_real_time",
+    "virtual_kernel",
     "TwoPhaseExplorer",
     "TunedRegistry",
     "ALL_PROFILES",

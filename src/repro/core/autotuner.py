@@ -7,7 +7,7 @@ generates it with the compilette (run-time machine-code generation),
 evaluates it, and **swaps the active function pointer** when the new score
 is better.
 
-Two scheduling modes:
+Three scheduling modes:
 
   * cooperative (default): a wake-up is attempted every ``wake_every``
     kernel invocations, inline. Deterministic; used by tests and by the
@@ -16,6 +16,14 @@ Two scheduling modes:
     the paper's separate auto-tuning thread. The kernel-call path only
     reads a function pointer under no lock (pointer swap is atomic in
     CPython); the tuning thread serializes itself with a lock.
+  * managed (``wake_every=None``): the autotuner never self-wakes; an
+    external scheduler — the process-wide ``TuningCoordinator`` — calls
+    ``wake()`` when it grants this kernel a regeneration slot.
+
+Time is read through an injectable ``clock`` callable (default
+``time.perf_counter``). Passing a ``VirtualClock`` makes the entire
+control loop — budgets, overhead fractions, gain estimates — a
+deterministic function of simulated costs (used by tests/benchmarks).
 """
 
 from __future__ import annotations
@@ -27,9 +35,13 @@ from typing import Any, Callable, Sequence
 
 from repro.core.compilette import Compilette, GeneratedKernel
 from repro.core.decision import RegenerationPolicy, TuningAccounts
-from repro.core.evaluator import Evaluator, Measurement
+from repro.core.evaluator import Measurement
 from repro.core.explorer import TwoPhaseExplorer
 from repro.core.tuning_space import Point
+
+# An external arbiter for regeneration budget (the coordinator's shared
+# budget): gate(accounts, now_s, next_cost_estimate_s) -> allowed.
+BudgetGate = Callable[[TuningAccounts, float, float], bool]
 
 
 @dataclasses.dataclass
@@ -45,26 +57,31 @@ class OnlineAutotuner:
     def __init__(
         self,
         compilette: Compilette,
-        evaluator: Evaluator,
+        evaluator: Any,
         *,
         policy: RegenerationPolicy | None = None,
         specialization: dict[str, Any] | None = None,
         reference_fn: Callable[..., Any] | None = None,
         reference_score_s: float | None = None,
         base_point: Point | None = None,
-        wake_every: int = 16,
+        seed_points: Sequence[Point] = (),
+        wake_every: int | None = 16,
         explorer: TwoPhaseExplorer | None = None,
+        clock: Callable[[], float] | None = None,
+        budget_gate: BudgetGate | None = None,
     ) -> None:
         self.compilette = compilette
         self.evaluator = evaluator
         self.policy = policy or RegenerationPolicy()
         self.specialization = dict(specialization or {})
+        self._clock = clock or time.perf_counter
+        self._budget_gate = budget_gate
         self.explorer = explorer or TwoPhaseExplorer(
-            compilette.space, base_point=base_point
+            compilette.space, base_point=base_point, seed_points=seed_points
         )
-        self.accounts = TuningAccounts(app_start_s=time.perf_counter())
+        self.accounts = TuningAccounts(app_start_s=self._clock())
         self._lock = threading.Lock()
-        self._wake_every = max(int(wake_every), 1)
+        self._wake_every = None if wake_every is None else max(int(wake_every), 1)
         self._cost_ema: float | None = None   # EMA of gen+eval cost
         self._lives: list[KernelLife] = []
         self._thread: threading.Thread | None = None
@@ -74,7 +91,7 @@ class OnlineAutotuner:
         # The reference baseline is measured through normal, instrumented
         # application work (paper §3.3) — it is accounted separately and
         # does not consume the regeneration budget.
-        t0 = time.perf_counter()
+        t0 = self._clock()
         if reference_fn is None:
             ref = self.compilette.generate(
                 self.explorer.base_point, **self.specialization
@@ -89,7 +106,7 @@ class OnlineAutotuner:
         self._active: Callable[..., Any] = reference_fn
         self._active_life = KernelLife(point=None, score_s=reference_score_s)
         self._lives.append(self._active_life)
-        self._init_time_s = time.perf_counter() - t0
+        self._init_time_s = self._clock() - t0
 
     # -------------------------------------------------------------- calling
     @property
@@ -106,6 +123,7 @@ class OnlineAutotuner:
         self.accounts.kernel_calls += 1
         if (
             self._thread is None
+            and self._wake_every is not None
             and self.accounts.kernel_calls % self._wake_every == 0
         ):
             self.wake()
@@ -125,14 +143,15 @@ class OnlineAutotuner:
             if self.explorer.finished:
                 return False
             self._update_gains()
-            now = time.perf_counter()
+            now = self._clock()
             estimate = self._cost_ema if self._cost_ema is not None else 0.0
-            if not self.policy.should_regenerate(self.accounts, now, estimate):
+            gate = self._budget_gate or self.policy.should_regenerate
+            if not gate(self.accounts, now, estimate):
                 return False
             point = self.explorer.next_point()
             if point is None:
                 return False
-            t0 = time.perf_counter()
+            t0 = self._clock()
             try:
                 kern: GeneratedKernel = self.compilette.generate(
                     point, **self.specialization
@@ -142,10 +161,10 @@ class OnlineAutotuner:
                 # Generation failures are holes discovered late: record the
                 # spent time and move on (the paper's "could not generate
                 # code" entries).
-                self.accounts.tuning_spent_s += time.perf_counter() - t0
+                self.accounts.tuning_spent_s += self._clock() - t0
                 self.explorer.report(point, float("inf"))
                 return False
-            spent = time.perf_counter() - t0
+            spent = self._clock() - t0
             self.accounts.tuning_spent_s += spent
             self.accounts.regenerations += 1
             self._cost_ema = (
@@ -199,7 +218,7 @@ class OnlineAutotuner:
     # ------------------------------------------------------------- reports
     def stats(self) -> dict[str, Any]:
         self._update_gains()
-        elapsed = time.perf_counter() - self.accounts.app_start_s
+        elapsed = self._clock() - self.accounts.app_start_s
         return {
             "kernel_calls": self.accounts.kernel_calls,
             "regenerations": self.accounts.regenerations,

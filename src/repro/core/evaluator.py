@@ -121,6 +121,91 @@ class Evaluator:
         return Measurement(score_s=score, n_runs=self.n_runs(), mode=self.mode, eval_time_s=eval_time)
 
 
+class VirtualClock:
+    """Injectable simulated time source.
+
+    A ``VirtualClock`` instance is callable (drop-in for
+    ``time.perf_counter``) and only moves when something calls
+    ``advance``. Injected into ``OnlineAutotuner``/``TuningCoordinator``
+    (their ``clock`` parameter) it makes the whole tuning control loop —
+    budget decisions, overhead accounting, time-to-best — a deterministic
+    function of the simulated costs, so tests and benchmarks never sleep
+    and never flake on a loaded host.
+    """
+
+    def __init__(self, start_s: float = 0.0) -> None:
+        self._now = float(start_s)
+
+    def __call__(self) -> float:
+        return self._now
+
+    def advance(self, dt_s: float) -> float:
+        if dt_s < 0:
+            raise ValueError(f"cannot advance a clock backwards ({dt_s})")
+        self._now += float(dt_s)
+        return self._now
+
+
+def virtual_kernel(clock: VirtualClock, cost_s: float, tag: Any = None):
+    """A fake kernel whose 'execution' advances ``clock`` by ``cost_s``.
+
+    The cost is attached as ``fn.score_s`` so ``VirtualClockEvaluator``
+    can read it back without re-running anything.
+    """
+
+    def fn(*args: Any) -> Any:
+        clock.advance(cost_s)
+        return args[0] if args else None
+
+    fn.score_s = float(cost_s)  # type: ignore[attr-defined]
+    fn.tag = tag                # type: ignore[attr-defined]
+    return fn
+
+
+class VirtualClockEvaluator:
+    """Deterministic evaluator driven by simulated time (no wall clock).
+
+    ``evaluate`` reads the variant's cost instead of timing it — either
+    via ``score_fn(fn)`` or, by default, from the ``score_s`` attribute
+    that ``virtual_kernel`` attaches — then charges a fixed simulated
+    measurement cost (``runs`` x score + ``fixed_eval_cost_s``) to the
+    injected ``VirtualClock``. Budget/overhead accounting in the
+    auto-tuner therefore behaves exactly as with a real evaluator, but
+    bit-reproducibly.
+    """
+
+    def __init__(
+        self,
+        clock: VirtualClock,
+        *,
+        score_fn: Callable[[Callable[..., Any]], float] | None = None,
+        runs: int = 1,
+        fixed_eval_cost_s: float = 0.0,
+    ) -> None:
+        self.clock = clock
+        self.score_fn = score_fn
+        self.runs = max(int(runs), 1)
+        self.fixed_eval_cost_s = float(fixed_eval_cost_s)
+        self.mode = "virtual"
+
+    def n_runs(self) -> int:
+        return self.runs
+
+    def evaluate(
+        self, fn: Callable[..., Any], args: Sequence[Any] | None = None
+    ) -> Measurement:
+        if self.score_fn is not None:
+            score = float(self.score_fn(fn))
+        else:
+            score = float(getattr(fn, "score_s"))
+        eval_cost = self.runs * score + self.fixed_eval_cost_s
+        self.clock.advance(eval_cost)
+        return Measurement(
+            score_s=score, n_runs=self.runs, mode="virtual",
+            eval_time_s=eval_cost,
+        )
+
+
 class SimulatedEvaluator:
     """Evaluator against an analytical device profile (paper's gem5 analogue).
 

@@ -18,7 +18,8 @@ when the regeneration policy grants budget, and feeds results back through
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Iterator
+import itertools
+from typing import Any, Iterator, Sequence
 
 from repro.core.tuning_space import Point, TuningSpace
 
@@ -41,15 +42,35 @@ class ExplorerState:
 
 
 class TwoPhaseExplorer:
-    def __init__(self, space: TuningSpace, base_point: Point | None = None) -> None:
+    def __init__(
+        self,
+        space: TuningSpace,
+        base_point: Point | None = None,
+        seed_points: "Sequence[Point]" = (),
+    ) -> None:
         self.space = space
         # Initial state of non-phase-1 parameters: pre-profiled defaults.
-        self.base_point: Point = dict(base_point or space.default_point())
+        # A supplied base point is merged OVER the defaults and restricted
+        # to known parameters, so a stale persisted point (from an older
+        # space definition) degrades gracefully instead of producing
+        # candidates with missing/unknown keys.
+        base = space.default_point()
+        for k, v in dict(base_point or {}).items():
+            if k in base:
+                base[k] = v
+        self.base_point: Point = base
         self.state = ExplorerState()
         self.best_point: Point | None = None
         self.best_score: float = float("inf")
         self._seen: set[tuple] = set()
         self._pending: Point | None = None
+        # Warm-start: seed points (e.g. a persisted best from a previous
+        # run) are proposed before any enumeration, so a warm process
+        # re-validates its known-best variant with a single regeneration.
+        self._seeds: list[Point] = [
+            dict(p) for p in seed_points
+            if space.contains(p) and space.is_valid(p)
+        ]
         self._phase1_iter = self._make_phase1_iter()
         self._phase2_iter: Iterator[Point] | None = None
         self.history: list[tuple[Point, float]] = []
@@ -63,7 +84,7 @@ class TwoPhaseExplorer:
             if self.space.is_valid(p)
         ]
         candidates.sort(key=lambda p: _leftover_rank(self.space, p))
-        return iter(candidates)
+        return itertools.chain(self._seeds, candidates)
 
     def _make_phase2_iter(self) -> Iterator[Point]:
         assert self.best_point is not None

@@ -12,6 +12,7 @@ from __future__ import annotations
 import json
 import os
 import tempfile
+import threading
 from typing import Any
 
 from repro.core.tuning_space import Point
@@ -22,8 +23,14 @@ def _canon(obj: Any) -> str:
 
 
 class TunedRegistry:
+    """Thread-safe: the coordinator's tuning thread calls ``put`` while
+    the application thread may be inside ``save`` (request end,
+    checkpoint), so mutation and serialization are serialized on an
+    internal lock."""
+
     def __init__(self) -> None:
         self._table: dict[str, dict[str, Any]] = {}
+        self._mu = threading.Lock()
 
     @staticmethod
     def key(kernel: str, specialization: dict[str, Any], device: str) -> str:
@@ -38,26 +45,32 @@ class TunedRegistry:
         score_s: float,
     ) -> None:
         k = self.key(kernel, specialization, device)
-        cur = self._table.get(k)
-        if cur is None or score_s < cur["score_s"]:
-            self._table[k] = {"point": dict(point), "score_s": float(score_s)}
+        with self._mu:
+            cur = self._table.get(k)
+            if cur is None or score_s < cur["score_s"]:
+                self._table[k] = {
+                    "point": dict(point), "score_s": float(score_s)}
 
     def get(
         self, kernel: str, specialization: dict[str, Any], device: str
     ) -> Point | None:
-        entry = self._table.get(self.key(kernel, specialization, device))
-        return dict(entry["point"]) if entry else None
+        with self._mu:
+            entry = self._table.get(self.key(kernel, specialization, device))
+            return dict(entry["point"]) if entry else None
 
     def __len__(self) -> int:
-        return len(self._table)
+        with self._mu:
+            return len(self._table)
 
     # ------------------------------------------------------------------ io
     def save(self, path: str) -> None:
+        with self._mu:
+            snapshot = {k: dict(v) for k, v in self._table.items()}
         os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
         fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".")
         try:
             with os.fdopen(fd, "w") as f:
-                json.dump(self._table, f, indent=1, sort_keys=True)
+                json.dump(snapshot, f, indent=1, sort_keys=True)
             os.replace(tmp, path)  # atomic publish
         except BaseException:
             if os.path.exists(tmp):
@@ -68,6 +81,18 @@ class TunedRegistry:
     def load(cls, path: str) -> "TunedRegistry":
         reg = cls()
         if os.path.exists(path):
-            with open(path) as f:
-                reg._table = json.load(f)
+            # A registry is a cache: a corrupt or partially-written file
+            # must degrade to a cold start, never crash the process.
+            try:
+                with open(path) as f:
+                    table = json.load(f)
+                if isinstance(table, dict):
+                    reg._table = {
+                        k: v for k, v in table.items()
+                        if isinstance(v, dict)
+                        and isinstance(v.get("point"), dict)
+                        and isinstance(v.get("score_s"), (int, float))
+                    }
+            except (json.JSONDecodeError, OSError, UnicodeDecodeError):
+                pass
         return reg

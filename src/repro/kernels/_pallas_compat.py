@@ -1,0 +1,12 @@
+"""Pallas API drift shims.
+
+``pltpu.CompilerParams`` is the current name; jax 0.4.x ships it as
+``TPUCompilerParams``. Kernels import the alias from here so they run on
+both.
+"""
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None)
+if CompilerParams is None:
+    CompilerParams = pltpu.TPUCompilerParams

@@ -24,6 +24,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._pallas_compat import CompilerParams
+
 Point = dict[str, Any]
 
 
@@ -120,7 +122,7 @@ def euclid_pallas(
         out_specs=pl.BlockSpec((bn, bm), o_map),
         out_shape=jax.ShapeDtypeStruct((N, M), jnp.float32),
         scratch_shapes=scratch,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")
         ),
         interpret=interpret,

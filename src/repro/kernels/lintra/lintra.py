@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._pallas_compat import CompilerParams
+
 Point = dict[str, Any]
 
 
@@ -72,7 +74,7 @@ def lintra_pallas(
         ],
         out_specs=pl.BlockSpec((bh, bw), x_map),
         out_shape=jax.ShapeDtypeStruct((H, WB), x.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel")
         ),
         interpret=interpret,

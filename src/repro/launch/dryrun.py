@@ -28,7 +28,7 @@ jax.config.update("jax_persistent_cache_min_compile_time_secs", 1.0)
 
 from repro.configs import REGISTRY, ALL_SHAPES
 from repro.distributed.roofline import collective_stats, roofline_from
-from repro.launch.mesh import make_production_mesh
+from repro.launch.mesh import make_production_mesh, set_mesh
 from repro.launch.shapes import build_cell, skip_reason
 
 ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "../../../dryrun_artifacts")
@@ -57,7 +57,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: str,
 
     t0 = time.time()
     cell = build_cell(cfg, shape, mesh)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         lowered = jax.jit(
             cell.fn,
             in_shardings=cell.in_shardings,
@@ -68,8 +68,9 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: str,
         compiled = lowered.compile()
         t_compile = time.time() - t0 - t_lower
 
+    from repro.distributed.hlo_analysis import compiled_cost_analysis
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = compiled_cost_analysis(compiled)
     print(mem)     # proves it fits
     print({k: cost.get(k) for k in ("flops", "bytes accessed")})
     hlo = compiled.as_text()

@@ -1,6 +1,12 @@
 """Serving launcher CLI.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-1.6b --reduced
+    PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-1.6b --reduced \
+        [--autotune --requests 4 --registry /tmp/serve_tuned.json]
+
+With ``--autotune`` the prefill and decode step-programs are tuned online
+by the process-wide TuningCoordinator; ``--requests N`` issues N identical
+requests through ONE coordinator, so later requests ride the variants the
+earlier ones discovered (and ``--registry`` persists them across restarts).
 """
 
 import argparse
@@ -13,28 +19,51 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--tokens", type=int, default=32)
+    ap.add_argument("--autotune", action="store_true")
+    ap.add_argument("--requests", type=int, default=1)
+    ap.add_argument("--registry", default=None,
+                    help="tuned-point registry path (warm-start)")
+    ap.add_argument("--tune-overhead", type=float, default=0.05,
+                    help="serving overhead cap (fraction of wall time)")
     args = ap.parse_args()
 
     import jax
 
     from repro.configs import get_config
-    from repro.runtime.serve_loop import ServeConfig, generate
+    from repro.runtime.serve_loop import (
+        ServeConfig, generate, make_serve_coordinator)
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
-    batch = {"tokens": jax.random.randint(
-        jax.random.PRNGKey(0), (args.batch, args.prompt_len), 0, cfg.vocab)}
-    if cfg.family == "encdec":
-        batch["audio_embeds"] = jax.random.normal(
-            jax.random.PRNGKey(1),
-            (args.batch, cfg.enc_frames, cfg.d_model)) * 0.05
-    if cfg.family == "vlm":
-        batch["vision"] = jax.random.normal(
-            jax.random.PRNGKey(1), (args.batch, 16, cfg.d_model)) * 0.05
-    out = generate(cfg, batch, ServeConfig(max_new_tokens=args.tokens))
-    print(f"{out['decode_tokens_per_s']:.1f} tok/s, "
-          f"prefill {out['prefill_s']*1e3:.0f} ms")
+    serve = ServeConfig(
+        max_new_tokens=args.tokens,
+        autotune=args.autotune,
+        tune_max_overhead=args.tune_overhead,
+        registry_path=args.registry,
+    )
+    coordinator = make_serve_coordinator(serve) if args.autotune else None
+
+    for req in range(args.requests):
+        batch = {"tokens": jax.random.randint(
+            jax.random.PRNGKey(req), (args.batch, args.prompt_len),
+            0, cfg.vocab)}
+        if cfg.family == "encdec":
+            batch["audio_embeds"] = jax.random.normal(
+                jax.random.PRNGKey(1),
+                (args.batch, cfg.enc_frames, cfg.d_model)) * 0.05
+        if cfg.family == "vlm":
+            batch["vision"] = jax.random.normal(
+                jax.random.PRNGKey(1), (args.batch, 16, cfg.d_model)) * 0.05
+        out = generate(cfg, batch, serve, coordinator=coordinator)
+        line = (f"req {req}: {out['decode_tokens_per_s']:.1f} tok/s, "
+                f"prefill {out['prefill_s']*1e3:.0f} ms")
+        if args.autotune:
+            a = out["autotune"]
+            line += (f"  [tuning: {a['regenerations']} regens, "
+                     f"{a['swaps']} swaps, "
+                     f"overhead {a['overhead_frac']*100:.1f}%]")
+        print(line)
 
 
 if __name__ == "__main__":

@@ -245,7 +245,8 @@ def decode_self_attention(
     cache_k = shard(cache_k, "batch", "kv_seq", "kv", "kv_dh")
     cache_v = shard(cache_v, "batch", "kv_seq", "kv", "kv_dh")
     length = jnp.minimum(pos + 1, S_eff)
-    o = decode_attention(q, cache_k, cache_v, length=length)
+    o = decode_attention(q, cache_k, cache_v, length=length,
+                         k_chunk=cfg.decode_k_chunk)
     return attn_out(o, p, cfg), (cache_k, cache_v)
 
 
@@ -260,7 +261,7 @@ def cross_attention(
     """Decoder cross-attention against precomputed encoder K/V."""
     q = jnp.einsum("btd,dhk->bthk", x, p["wq"].astype(x.dtype))
     if x.shape[1] == 1:
-        o = decode_attention(q, enc_k, enc_v)
+        o = decode_attention(q, enc_k, enc_v, k_chunk=cfg.decode_k_chunk)
     else:
         o = flash_attention_jnp(
             q, enc_k, enc_v, causal=False,

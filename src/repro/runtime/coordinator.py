@@ -1,0 +1,342 @@
+"""Process-wide tuning coordinator: one budget, many kernels, warm starts.
+
+The paper tunes ONE kernel per process with its own regeneration budget.
+A production process (training loop, serving binary) runs MANY tunable
+step-programs — prefill, decode, the train step, individual Pallas
+kernels — and restarts or scales out constantly. The coordinator extends
+the paper's economics across both dimensions:
+
+  * **one budget for the whole process** — a single
+    :class:`RegenerationPolicy` is applied to the *sum* of tuning time
+    spent and time gained across every managed autotuner, so adding more
+    tunable kernels never multiplies the tuning overhead cap;
+  * **fairness by estimated gain** — each scheduling slot goes to the
+    kernel with the highest estimated return per regeneration
+    (unmeasured kernels first, then ``potential_gain x call_rate /
+    regenerations``), so a hot kernel with headroom gets tuned before a
+    cold one that is already optimal;
+  * **warm starts from the registry** — every autotuner is seeded from
+    the :class:`TunedRegistry` under (kernel, specialization, device
+    fingerprint); a restarted or elastically re-scaled job re-validates
+    its persisted best variant with a single regeneration instead of
+    re-exploring the space (cf. the Kernel Tuning Toolkit's persistent
+    dynamic-autotuning service, arXiv:1910.08498);
+  * **one tuning thread per process** — instead of one thread per
+    kernel, a single coordinator thread (or cooperative ``maybe_pump``
+    calls on the hot path) drives every managed autotuner.
+
+Time is read through an injectable ``clock`` (default
+``time.perf_counter``); with a :class:`~repro.core.VirtualClock` the
+whole scheduler is deterministic, which is how the tier-1 tests drive it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import threading
+import time
+from typing import Any, Callable, Sequence
+
+from repro.core.autotuner import OnlineAutotuner
+from repro.core.compilette import Compilette
+from repro.core.decision import RegenerationPolicy, TuningAccounts
+from repro.core.persistence import TunedRegistry
+from repro.core.tuning_space import Point
+
+
+def device_fingerprint() -> str:
+    """Stable identity of the accelerator the process is tuning for.
+
+    Tuned points are only transferable between identical devices, so the
+    registry key includes this fingerprint.
+    """
+    try:
+        import jax
+
+        d = jax.devices()[0]
+        return f"{d.platform}:{d.device_kind}"
+    except Exception:
+        return "unknown"
+
+
+def _canon_spec(spec: dict[str, Any]) -> str:
+    return json.dumps(spec, sort_keys=True, separators=(",", ":"))
+
+
+@dataclasses.dataclass
+class ManagedTuner:
+    """One kernel/step-program under coordinator management."""
+
+    name: str
+    specialization: dict[str, Any]
+    tuner: OnlineAutotuner
+    warm_started: bool
+    calls_at_last_wake: int = 0
+
+    def __call__(self, *args: Any) -> Any:
+        return self.tuner(*args)
+
+    @property
+    def active_fn(self) -> Callable[..., Any]:
+        return self.tuner.active_fn
+
+    def stats(self) -> dict[str, Any]:
+        out = self.tuner.stats()
+        out["warm_started"] = self.warm_started
+        return out
+
+
+class TuningCoordinator:
+    """Owns every :class:`OnlineAutotuner` of a process.
+
+    ``register`` is idempotent per (name, specialization): serving code
+    can re-register on every request and always gets the same managed
+    autotuner back, which is what makes tuning pay off *across* requests.
+    """
+
+    def __init__(
+        self,
+        *,
+        policy: RegenerationPolicy | None = None,
+        registry: TunedRegistry | None = None,
+        registry_path: str | None = None,
+        device: str | None = None,
+        clock: Callable[[], float] | None = None,
+        pump_every: int = 8,
+    ) -> None:
+        self.policy = policy or RegenerationPolicy()
+        self.clock = clock or time.perf_counter
+        if registry is not None:
+            self.registry = registry
+        elif registry_path is not None:
+            self.registry = TunedRegistry.load(registry_path)
+        else:
+            self.registry = TunedRegistry()
+        self.registry_path = registry_path
+        self.device = device or device_fingerprint()
+        self.app_start_s = self.clock()
+        self.pump_every = max(int(pump_every), 1)
+        self._managed: list[ManagedTuner] = []
+        self._by_key: dict[tuple[str, str], ManagedTuner] = {}
+        self._lock = threading.Lock()
+        self._thread: threading.Thread | None = None
+        self._stop = threading.Event()
+        self._app_calls = 0
+
+    # ------------------------------------------------------------ register
+    def register(
+        self,
+        name: str,
+        compilette: Compilette,
+        evaluator: Any,
+        *,
+        specialization: dict[str, Any] | None = None,
+        reference_fn: Callable[..., Any] | None = None,
+        reference_score_s: float | None = None,
+    ) -> ManagedTuner:
+        spec = dict(specialization or {})
+        key = (name, _canon_spec(spec))
+        with self._lock:
+            existing = self._by_key.get(key)
+            if existing is not None:
+                return existing
+            warm_point = self.registry.get(name, spec, self.device)
+            if warm_point is None and ":" in self.device:
+                # pre-coordinator registries keyed by bare device_kind
+                warm_point = self.registry.get(
+                    name, spec, self.device.split(":", 1)[1])
+            if warm_point is not None and not compilette.space.contains(
+                    warm_point):
+                # stale entry from an older space definition (renamed or
+                # added parameters): a cache miss, never a crash
+                warm_point = None
+            tuner = OnlineAutotuner(
+                compilette,
+                evaluator,
+                policy=self.policy,
+                specialization=spec,
+                reference_fn=reference_fn,
+                reference_score_s=reference_score_s,
+                base_point=warm_point,
+                seed_points=[warm_point] if warm_point else (),
+                wake_every=None,           # managed: coordinator schedules
+                clock=self.clock,
+                budget_gate=self._shared_budget_gate,
+            )
+            managed = ManagedTuner(
+                name=name,
+                specialization=spec,
+                tuner=tuner,
+                warm_started=warm_point is not None,
+            )
+            self._managed.append(managed)
+            self._by_key[key] = managed
+            return managed
+
+    # ------------------------------------------------------- shared budget
+    def _aggregate_accounts(self) -> TuningAccounts:
+        agg = TuningAccounts(app_start_s=self.app_start_s)
+        for m in self._managed:
+            t = m.tuner
+            t._update_gains()
+            agg.tuning_spent_s += t.accounts.tuning_spent_s
+            agg.gained_s += t.accounts.gained_s
+            agg.kernel_calls += t.accounts.kernel_calls
+            agg.regenerations += t.accounts.regenerations
+            agg.swaps += t.accounts.swaps
+            agg.init_spent_s += t.accounts.init_spent_s
+        return agg
+
+    def _shared_budget_gate(
+        self, _caller: TuningAccounts, now_s: float, estimate_s: float
+    ) -> bool:
+        """Regeneration gate applied to the PROCESS totals, not the caller.
+
+        Every managed autotuner defers here, so the overhead cap bounds
+        the sum of all tuning time while gains found by one kernel can
+        fund exploration of another.
+        """
+        return self.policy.should_regenerate(
+            self._aggregate_accounts(), now_s, estimate_s
+        )
+
+    # ----------------------------------------------------------- schedule
+    def _priority(self, m: ManagedTuner) -> float:
+        """Estimated return of granting this kernel the next slot."""
+        t = m.tuner
+        if t.explorer.finished:
+            return float("-inf")
+        if t.accounts.regenerations == 0:
+            # Nothing measured yet: exploration has unbounded information
+            # value; bootstrap in registration order.
+            return float("inf")
+        calls_since = t.accounts.kernel_calls - m.calls_at_last_wake
+        potential = max(
+            t.reference_score_s - max(t.explorer.best_score, 0.0), 0.0
+        )
+        # gain-rate estimate, damped by how much we already invested here
+        return (potential * (1.0 + calls_since)) / (
+            1.0 + t.accounts.regenerations
+        )
+
+    def _pick(self) -> ManagedTuner | None:
+        best: ManagedTuner | None = None
+        best_pri = float("-inf")
+        for m in self._managed:   # registration order breaks ties
+            pri = self._priority(m)
+            if pri > best_pri:
+                best, best_pri = m, pri
+        if best_pri == float("-inf"):
+            return None
+        return best
+
+    def pump(self) -> bool:
+        """One scheduling slot: pick the best kernel and wake it.
+
+        Returns True when the wake swapped in a faster variant.
+        """
+        with self._lock:
+            m = self._pick()
+        if m is None:
+            return False
+        regens_before = m.tuner.accounts.regenerations
+        swapped = m.tuner.wake()
+        if m.tuner.accounts.regenerations == regens_before:
+            # budget-denied (or space exhausted): the slot did nothing, so
+            # leave the kernel's hotness signal intact — resetting it here
+            # would starve exactly the kernel we judged most valuable.
+            return False
+        m.calls_at_last_wake = m.tuner.accounts.kernel_calls
+        best = m.tuner.explorer.best_point
+        if best is not None:
+            self.registry.put(
+                m.name, m.specialization, self.device,
+                best, m.tuner.explorer.best_score,
+            )
+        return swapped
+
+    def maybe_pump(self) -> bool:
+        """Cooperative pacing: call once per application step/iteration."""
+        self._app_calls += 1
+        if self._thread is not None:
+            return False
+        if self._app_calls % self.pump_every:
+            return False
+        return self.pump()
+
+    @property
+    def finished(self) -> bool:
+        return all(m.tuner.explorer.finished for m in self._managed)
+
+    # ------------------------------------------------------------ threaded
+    def start_thread(self, wake_period_s: float = 0.002) -> None:
+        """Single per-process tuning thread (replaces one thread/kernel)."""
+        if self._thread is not None:
+            return
+
+        def _loop() -> None:
+            while not self._stop.is_set():
+                self.pump()
+                if self.finished:
+                    break
+                self._stop.wait(wake_period_s)
+
+        self._thread = threading.Thread(
+            target=_loop, daemon=True, name="tuning-coordinator"
+        )
+        self._thread.start()
+
+    def stop_thread(self) -> None:
+        if self._thread is None:
+            return
+        self._stop.set()
+        self._thread.join(timeout=5.0)
+        self._thread = None
+        self._stop = threading.Event()
+
+    # --------------------------------------------------------- persistence
+    def save_registry(self, path: str | None = None) -> None:
+        path = path or self.registry_path
+        if path is None:
+            return
+        # flush current bests before writing
+        for m in self._managed:
+            best = m.tuner.explorer.best_point
+            if best is not None:
+                self.registry.put(
+                    m.name, m.specialization, self.device,
+                    best, m.tuner.explorer.best_score,
+                )
+        self.registry.save(path)
+
+    def close(self) -> None:
+        self.stop_thread()
+        self.save_registry()
+
+    # ------------------------------------------------------------- reports
+    def stats(self) -> dict[str, Any]:
+        agg = self._aggregate_accounts()
+        elapsed = self.clock() - self.app_start_s
+        return {
+            "device": self.device,
+            "n_kernels": len(self._managed),
+            "regenerations": agg.regenerations,
+            "swaps": agg.swaps,
+            "tuning_spent_s": agg.tuning_spent_s,
+            "gained_s": agg.gained_s,
+            "overhead_frac": (
+                agg.tuning_spent_s / elapsed if elapsed > 0 else 0.0
+            ),
+            "budget_s": self.policy.budget_s(agg, self.clock()),
+            "kernels": self._kernel_stats(),
+        }
+
+    def _kernel_stats(self) -> dict[str, dict[str, Any]]:
+        out: dict[str, dict[str, Any]] = {}
+        for m in self._managed:
+            key = m.name
+            if key in out:   # same kernel, different specialization
+                key = f"{m.name}@{_canon_spec(m.specialization)}"
+            out[key] = m.stats()
+        return out

@@ -1,4 +1,13 @@
-"""Serving runtime: batched prefill + greedy decode with KV/state cache."""
+"""Serving runtime: batched prefill + greedy decode with KV/state cache.
+
+Online auto-tuning (paper technique, serving workload): the prefill and
+decode step-programs are tunable compilettes — attention chunking for
+prefill, flash-decoding KV-chunk for decode — managed by the process-wide
+:class:`TuningCoordinator` under a strict serving overhead cap. Pass a
+long-lived coordinator (one per serving process) so tuning state, budget
+and warm-started best points persist across requests; within a single
+``generate`` call tuning already begins between decode steps.
+"""
 
 from __future__ import annotations
 
@@ -10,7 +19,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.core import Compilette, Evaluator, Param, RegenerationPolicy, product_space
 from repro.models.model import build_model
+from repro.runtime.coordinator import TuningCoordinator
 
 
 @dataclasses.dataclass
@@ -19,12 +30,76 @@ class ServeConfig:
     greedy: bool = True
     temperature: float = 1.0
     seed: int = 0
+    # --- online auto-tuning (off by default: zero-overhead serving) ------
+    autotune: bool = False
+    tune_max_overhead: float = 0.05   # strict serving cap: ≤5 % of wall
+    tune_invest: float = 0.10
+    registry_path: str | None = None  # warm-start across server restarts
+    pump_every: int = 4               # decode steps between tuning slots
+
+
+def _clamped(options: tuple[int, ...], bound: int) -> tuple[int, ...]:
+    """Deduplicate chunk options past ``bound``: values larger than the
+    sequence all compile to the same program, and re-measuring duplicates
+    would waste the shared regeneration budget."""
+    return tuple(sorted({min(v, bound) for v in options}))
+
+
+def _prefill_compilette(model_cfg: ModelConfig, seq: int) -> Compilette:
+    """Points are prefill step-programs: attention chunking variants."""
+    space = product_space([
+        Param("attn_q_chunk", _clamped((32, 64, 128, 256), seq),
+              phase=1, switch_rank=0),
+        Param("attn_k_chunk", _clamped((32, 64, 128, 256), seq),
+              phase=1, switch_rank=1),
+    ])
+
+    def gen(point, **spec):
+        cfg2 = dataclasses.replace(
+            model_cfg,
+            attn_q_chunk=point["attn_q_chunk"],
+            attn_k_chunk=point["attn_k_chunk"],
+        )
+        return jax.jit(build_model(cfg2).prefill)
+
+    return Compilette("serve_prefill", space, gen)
+
+
+def _decode_compilette(model_cfg: ModelConfig, max_len: int) -> Compilette:
+    """Points are decode step-programs: flash-decoding KV-chunk variants."""
+    space = product_space([
+        Param("decode_k_chunk",
+              _clamped((128, 256, 512, 1024, 4096), max_len), phase=1),
+    ])
+
+    def gen(point, **spec):
+        cfg2 = dataclasses.replace(
+            model_cfg, decode_k_chunk=point["decode_k_chunk"])
+        return jax.jit(build_model(cfg2).decode_step)
+
+    return Compilette("serve_decode", space, gen)
+
+
+def make_serve_coordinator(
+    serve: ServeConfig, *, clock=None
+) -> TuningCoordinator:
+    """One coordinator per serving process (shared across requests)."""
+    return TuningCoordinator(
+        policy=RegenerationPolicy(
+            max_overhead_frac=serve.tune_max_overhead,
+            invest_frac=serve.tune_invest,
+        ),
+        registry_path=serve.registry_path,
+        pump_every=serve.pump_every,
+        clock=clock,
+    )
 
 
 def generate(
     model_cfg: ModelConfig,
     batch: dict[str, Any],
     serve: ServeConfig | None = None,
+    coordinator: TuningCoordinator | None = None,
 ) -> dict[str, Any]:
     """Prefill the prompt batch, then decode ``max_new_tokens`` greedily."""
     serve = serve or ServeConfig()
@@ -43,6 +118,27 @@ def generate(
     prefill = jax.jit(model.prefill)
     decode = jax.jit(model.decode_step)
 
+    # ---- online tuning of the two step-programs -------------------------
+    tune_init_s = 0.0
+    decode_state: dict[str, Any] = {}
+    if serve.autotune:
+        t_init = time.perf_counter()
+        if coordinator is None:
+            coordinator = make_serve_coordinator(serve)
+        prefill_ev = Evaluator(
+            mode="real", real_runs=1, warmup=1,
+            make_args=lambda: (params, batch))
+        prefill = coordinator.register(
+            "serve_prefill", _prefill_compilette(model_cfg, T), prefill_ev,
+            specialization={"seq": T, "batch": B},
+            reference_fn=prefill,
+        )
+        # register() is idempotent across requests: point the (possibly
+        # pre-existing) evaluator at THIS request's inputs so measurements
+        # stay representative of live traffic.
+        prefill.tuner.evaluator.make_args = prefill_ev.make_args
+        tune_init_s = time.perf_counter() - t_init
+
     t0 = time.perf_counter()
     logits, cache = prefill(params, batch)
     # widen KV caches to max_len where the family uses positional caches
@@ -60,19 +156,53 @@ def generate(
     tokens = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
     out_tokens = [tokens]
     pos0 = T if model_cfg.family != "vlm" else T + model_cfg.vision_patches
+
+    if serve.autotune:
+        # The decode evaluator replays the *current* decoding state; its
+        # outputs are discarded, so measurement is side-effect-free.
+        t_init = time.perf_counter()
+        decode_state.update(cache=cache, tokens=tokens, pos=jnp.int32(pos0))
+        decode_ev = Evaluator(
+            mode="real", real_runs=1, warmup=1,
+            make_args=lambda: (params, decode_state["cache"],
+                               decode_state["tokens"], decode_state["pos"]))
+        decode = coordinator.register(
+            "serve_decode", _decode_compilette(model_cfg, max_len), decode_ev,
+            specialization={"max_len": max_len, "batch": B},
+            reference_fn=decode,
+        )
+        decode.tuner.evaluator.make_args = decode_ev.make_args
+        tune_init_s += time.perf_counter() - t_init
+
     t1 = time.perf_counter()
     for i in range(serve.max_new_tokens - 1):
         logits, cache = decode(params, cache, tokens, jnp.int32(pos0 + i))
         tokens = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
         out_tokens.append(tokens)
+        if serve.autotune:
+            decode_state.update(
+                cache=cache, tokens=tokens, pos=jnp.int32(pos0 + i + 1))
+            coordinator.maybe_pump()
     jax.block_until_ready(tokens)
     t_decode = time.perf_counter() - t1
 
     generated = jnp.concatenate(out_tokens, axis=1)
     n_new = generated.shape[1]
-    return {
+    out = {
         "tokens": generated,
         "prefill_s": t_prefill,
         "decode_s": t_decode,
         "decode_tokens_per_s": B * n_new / t_decode if t_decode > 0 else 0.0,
     }
+    if serve.autotune:
+        coordinator.save_registry()
+        # Evaluator closures pin this request's params/batch/cache so
+        # between-request pumps can still measure variants; once a tuner
+        # has exhausted its space nothing will evaluate again — release
+        # the arrays instead of holding them for the coordinator's life.
+        for managed in (prefill, decode):
+            if managed.tuner.explorer.finished:
+                managed.tuner.evaluator.make_args = None
+        out["tune_init_s"] = tune_init_s
+        out["autotune"] = coordinator.stats()
+    return out

@@ -7,6 +7,11 @@ regeneration-budget policy, hot-swapping the active jitted step when a
 variant measures faster. All overheads are part of the wall-clock the loop
 reports, exactly like the paper's "all run-time overheads included".
 
+Tuning is owned by the process-wide ``TuningCoordinator``: the budget is
+shared with any other tunable step-programs of the process, and the best
+points are persisted next to the checkpoints so a restarted (or
+elastically re-scaled) job warm-starts instead of re-exploring.
+
 Fault tolerance:
   * checkpoint every ``ckpt_every`` steps (atomic, retained set),
   * auto-resume from the latest checkpoint (data stream is a pure function
@@ -30,14 +35,14 @@ import jax.numpy as jnp
 from repro.checkpoint.checkpointer import Checkpointer
 from repro.configs.base import ModelConfig, ShapeSpec
 from repro.core import (
-    Compilette, Evaluator, OnlineAutotuner, Param, RegenerationPolicy,
-    TunedRegistry, product_space,
+    Compilette, Evaluator, Param, RegenerationPolicy, product_space,
 )
 from repro.data.pipeline import batches_for, device_put_batch
 from repro.distributed.compression import ErrorFeedback
 from repro.models.model import build_model
 from repro.models.params import init_tree
 from repro.optim.adamw import AdamW, OptimizerConfig
+from repro.runtime.coordinator import TuningCoordinator
 
 
 @dataclasses.dataclass
@@ -104,7 +109,6 @@ def train(
     ef = ErrorFeedback() if loop.compress_grads else None
     ckpt = Checkpointer(loop.ckpt_dir, keep=loop.keep)
     registry_path = f"{loop.ckpt_dir}/tuned.json"
-    registry = TunedRegistry.load(registry_path)
 
     # ---- init or resume -------------------------------------------------
     key = jax.random.PRNGKey(loop.seed)
@@ -127,24 +131,27 @@ def train(
     first_batch = device_put_batch(next(stream))
     raw_step = jax.jit(_make_step(model, optimizer, ef, model_cfg))
 
+    coordinator = None
     tuner = None
     if loop.autotune:
         comp = _attention_step_compilette(
             model_cfg, model, optimizer, ef, first_batch)
-        device = jax.devices()[0].device_kind
         spec = {"seq": shape.seq_len}
         evaluator = Evaluator(
             mode="real", real_runs=2, warmup=1,
             make_args=lambda: (params, opt_state, ef_state, first_batch))
-        tuned = registry.get("train_step_attn", spec, device)
-        tuner = OnlineAutotuner(
-            comp, evaluator,
+        # Process-wide coordinator: one regeneration budget shared by every
+        # tunable step-program, warm-started from the checkpoint-adjacent
+        # registry so a restarted job skips re-exploration.
+        coordinator = TuningCoordinator(
             policy=RegenerationPolicy(loop.tune_max_overhead,
                                       loop.tune_invest),
-            specialization=spec,
-            reference_fn=raw_step,
-            base_point=(tuned or None),
-            wake_every=2,
+            registry_path=registry_path,
+            pump_every=2,
+        )
+        tuner = coordinator.register(
+            "train_step_attn", comp, evaluator,
+            specialization=spec, reference_fn=raw_step,
         )
 
     # ---- loop ------------------------------------------------------------
@@ -162,6 +169,8 @@ def train(
         loss, params, opt_state, ef_state, gnorm = fn(
             params, opt_state, ef_state, batch)
         loss = float(loss)
+        if coordinator is not None:
+            coordinator.maybe_pump()
         dt = time.perf_counter() - t0
         durations.append(dt)
         if len(durations) >= 5:
@@ -173,11 +182,8 @@ def train(
         if step % loop.ckpt_every == 0 or step == loop.steps:
             ckpt.save(step, {"params": params, "opt": opt_state},
                       extra={"loss": loss})
-            if tuner is not None and tuner.best_point is not None:
-                registry.put("train_step_attn", {"seq": shape.seq_len},
-                             jax.devices()[0].device_kind,
-                             tuner.best_point, tuner.explorer.best_score)
-                registry.save(registry_path)
+            if coordinator is not None:
+                coordinator.save_registry()
         batch = device_put_batch(next(stream))
 
     wall = time.perf_counter() - t_start
@@ -192,4 +198,7 @@ def train(
     }
     if tuner is not None:
         out["autotune"] = tuner.stats()
+    if coordinator is not None:
+        coordinator.close()
+        out["coordinator"] = coordinator.stats()
     return out

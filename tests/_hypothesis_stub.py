@@ -1,0 +1,165 @@
+"""Deterministic fallback for `hypothesis` when the package is absent.
+
+The tier-1 suite must collect and run in minimal containers (no optional
+test extras). When the real `hypothesis` is importable, conftest.py leaves
+it alone and this module is never used. Otherwise conftest installs this
+module under the name ``hypothesis``: property tests degrade to a seeded,
+reproducible sweep of examples drawn from the same strategy expressions.
+
+Only the strategy surface the test suite uses is implemented:
+``floats``, ``integers``, ``sampled_from``, ``tuples``, ``dictionaries``.
+Example draws are seeded per test function (CRC of the qualified name), so
+a failure reproduces bit-identically across runs and machines.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import types
+import zlib
+from typing import Any, Callable
+
+DEFAULT_MAX_EXAMPLES = 20
+
+
+class SearchStrategy:
+    def __init__(self, draw: Callable[[random.Random], Any]) -> None:
+        self._draw = draw
+
+    def draw(self, rng: random.Random) -> Any:
+        return self._draw(rng)
+
+    def map(self, fn: Callable[[Any], Any]) -> "SearchStrategy":
+        return SearchStrategy(lambda rng: fn(self._draw(rng)))
+
+    def filter(self, pred: Callable[[Any], bool]) -> "SearchStrategy":
+        def draw(rng: random.Random) -> Any:
+            for _ in range(1000):
+                v = self._draw(rng)
+                if pred(v):
+                    return v
+            raise RuntimeError("filter predicate rejected 1000 draws")
+        return SearchStrategy(draw)
+
+
+def floats(min_value: float = 0.0, max_value: float = 1.0, **_: Any) -> SearchStrategy:
+    lo, hi = float(min_value), float(max_value)
+
+    def draw(rng: random.Random) -> float:
+        # Bias towards the edges occasionally: boundary values are where
+        # budget/validity predicates break.
+        r = rng.random()
+        if r < 0.05:
+            return lo
+        if r < 0.10:
+            return hi
+        return rng.uniform(lo, hi)
+
+    return SearchStrategy(draw)
+
+
+def integers(min_value: int = 0, max_value: int = 1 << 30, **_: Any) -> SearchStrategy:
+    lo, hi = int(min_value), int(max_value)
+
+    def draw(rng: random.Random) -> int:
+        r = rng.random()
+        if r < 0.05:
+            return lo
+        if r < 0.10:
+            return hi
+        return rng.randint(lo, hi)
+
+    return SearchStrategy(draw)
+
+
+def sampled_from(options: Any) -> SearchStrategy:
+    opts = list(options)
+    return SearchStrategy(lambda rng: opts[rng.randrange(len(opts))])
+
+
+def tuples(*strats: SearchStrategy) -> SearchStrategy:
+    return SearchStrategy(lambda rng: tuple(s.draw(rng) for s in strats))
+
+
+def lists(elements: SearchStrategy, min_size: int = 0, max_size: int = 8,
+          **_: Any) -> SearchStrategy:
+    def draw(rng: random.Random) -> list:
+        n = rng.randint(min_size, max(max_size, min_size))
+        return [elements.draw(rng) for _ in range(n)]
+    return SearchStrategy(draw)
+
+
+def dictionaries(keys: SearchStrategy, values: SearchStrategy,
+                 min_size: int = 0, max_size: int = 8, **_: Any) -> SearchStrategy:
+    def draw(rng: random.Random) -> dict:
+        want = rng.randint(min_size, max(max_size, min_size))
+        out: dict = {}
+        # Key strategies over small finite domains collide; cap the attempts
+        # so a domain smaller than min_size cannot loop forever.
+        for _ in range(50 * (want + 1)):
+            if len(out) >= want:
+                break
+            out[keys.draw(rng)] = values.draw(rng)
+        return out
+    return SearchStrategy(draw)
+
+
+def just(value: Any) -> SearchStrategy:
+    return SearchStrategy(lambda rng: value)
+
+
+def booleans() -> SearchStrategy:
+    return SearchStrategy(lambda rng: rng.random() < 0.5)
+
+
+def given(*arg_strats: SearchStrategy, **kw_strats: SearchStrategy):
+    """Decorator: run the test once per drawn example (seeded per test)."""
+
+    def deco(fn: Callable[..., Any]) -> Callable[..., Any]:
+        sig = inspect.signature(fn)
+        names = [n for n in sig.parameters if n not in kw_strats]
+        # hypothesis binds positional strategies to the RIGHTMOST
+        # parameters (the left ones stay free for pytest fixtures)
+        pos_names = names[len(names) - len(arg_strats):] if arg_strats else []
+        drawn_names = set(kw_strats) | set(pos_names)
+
+        @functools.wraps(fn)
+        def wrapper(*args: Any, **kwargs: Any) -> None:
+            n = getattr(wrapper, "_stub_max_examples", DEFAULT_MAX_EXAMPLES)
+            rng = random.Random(zlib.crc32(fn.__qualname__.encode()))
+            for _ in range(n):
+                drawn = {name: s.draw(rng)
+                         for name, s in zip(pos_names, arg_strats)}
+                drawn.update((k, s.draw(rng)) for k, s in kw_strats.items())
+                fn(*args, **drawn, **kwargs)
+
+        # pytest must not treat the drawn parameters as fixtures: expose a
+        # signature with them removed (and drop __wrapped__, which pytest
+        # would otherwise follow back to the original signature).
+        del wrapper.__wrapped__
+        keep = [p for name, p in sig.parameters.items()
+                if name not in drawn_names]
+        wrapper.__signature__ = sig.replace(parameters=keep)  # type: ignore[attr-defined]
+        wrapper._stub_is_hypothesis = True  # type: ignore[attr-defined]
+        return wrapper
+
+    return deco
+
+
+def settings(max_examples: int = DEFAULT_MAX_EXAMPLES, **_: Any):
+    """Decorator (applied above @given): caps the example count."""
+
+    def deco(fn: Callable[..., Any]) -> Callable[..., Any]:
+        fn._stub_max_examples = max_examples  # type: ignore[attr-defined]
+        return fn
+
+    return deco
+
+
+# ``from hypothesis import strategies as st`` needs a module-like attribute.
+strategies = types.ModuleType("hypothesis.strategies")
+for _name in ("floats", "integers", "sampled_from", "tuples", "lists",
+              "dictionaries", "just", "booleans", "SearchStrategy"):
+    setattr(strategies, _name, globals()[_name])

@@ -6,7 +6,52 @@ import sys
 os.environ.pop("XLA_FLAGS", None)
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.dirname(__file__))
+
+# ---- optional test extras -------------------------------------------------
+# `hypothesis` is an optional extra: fall back to the deterministic stub so
+# the tier-1 suite collects and runs in minimal containers.
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    import _hypothesis_stub
+
+    sys.modules["hypothesis"] = _hypothesis_stub
+    sys.modules["hypothesis.strategies"] = _hypothesis_stub.strategies
 
 import jax
 
 jax.config.update("jax_enable_x64", False)
+
+
+# ---- @pytest.mark.flaky fallback -----------------------------------------
+# pytest-rerunfailures implements the mark when installed; this minimal
+# rerun protocol keeps the mark functional (and the suite warning-free)
+# without it. Only the final attempt's reports are logged.
+try:
+    import pytest_rerunfailures  # noqa: F401
+
+    _HAVE_RERUNFAILURES = True
+except ImportError:
+    _HAVE_RERUNFAILURES = False
+
+if not _HAVE_RERUNFAILURES:
+    from _pytest.runner import runtestprotocol
+
+    def pytest_runtest_protocol(item, nextitem):
+        marker = item.get_closest_marker("flaky")
+        if marker is None:
+            return None
+        reruns = int(marker.kwargs.get("reruns", marker.args[0] if marker.args else 1))
+        item.ihook.pytest_runtest_logstart(
+            nodeid=item.nodeid, location=item.location)
+        for attempt in range(reruns + 1):
+            reports = runtestprotocol(item, nextitem=nextitem, log=False)
+            failed = any(r.failed for r in reports)
+            if not failed or attempt == reruns:
+                for report in reports:
+                    item.ihook.pytest_runtest_logreport(report=report)
+                break
+        item.ihook.pytest_runtest_logfinish(
+            nodeid=item.nodeid, location=item.location)
+        return True

@@ -79,6 +79,14 @@ def test_filtered_training_time_robust_to_spikes():
 
 
 # ------------------------------------------------------------- end-to-end
+def busy_wait(seconds):
+    """Spin instead of sleep: time.sleep() granularity (~50-100us on a
+    loaded host) swamps the sub-100us cost differences between variants."""
+    t0 = time.perf_counter()
+    while time.perf_counter() - t0 < seconds:
+        pass
+
+
 def make_fake_compilette(cost_fn):
     sp = product_space([
         Param("unroll", (1, 2, 4, 8), phase=1, switch_rank=0),
@@ -89,7 +97,7 @@ def make_fake_compilette(cost_fn):
         c = cost_fn(point)
 
         def fn(x):
-            time.sleep(c)
+            busy_wait(c)
             return x
         return fn
 
