@@ -11,11 +11,15 @@ VirtualClock (simulated seconds, so numbers are reproducible anywhere):
 The cold process explores the space from scratch; the warm process loads
 the registry the cold one persisted and re-validates the stored best with
 a single regeneration. A multi-kernel scenario shows the same effect when
-one shared budget serves several kernels at once.
+one shared budget serves several kernels at once. ``--strategy`` runs the
+same scenarios under any registered search strategy (the warm-start
+economics are strategy-independent: the registry seed is always proposed
+first).
 
-    PYTHONPATH=src python benchmarks/coordinator_warmstart.py
+    PYTHONPATH=src python benchmarks/coordinator_warmstart.py [--strategy greedy]
 """
 
+import argparse
 import os
 import sys
 import tempfile
@@ -56,13 +60,15 @@ def make_kernel_suite(clock, n_kernels: int):
     return suite
 
 
-def run_process(registry_path, n_kernels: int, calls: int = 6000):
+def run_process(registry_path, n_kernels: int, calls: int = 6000,
+                strategy: str = "two_phase"):
     """Simulate one process lifetime; return per-kernel time-to-best."""
     clock = VirtualClock()
     ev = VirtualClockEvaluator(clock)
     coord = TuningCoordinator(
         policy=RegenerationPolicy(max_overhead_frac=0.05, invest_frac=0.5),
-        registry_path=registry_path, device=DEVICE, clock=clock)
+        registry_path=registry_path, device=DEVICE, clock=clock,
+        strategy=strategy)
     managed = []
     for name, comp, base, best in make_kernel_suite(clock, n_kernels):
         m = coord.register(name, comp, ev,
@@ -91,12 +97,19 @@ def run_process(registry_path, n_kernels: int, calls: int = 6000):
 
 
 def main() -> None:
+    from repro.core import available_strategies
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--strategy", default="two_phase",
+                    choices=available_strategies())
+    args = ap.parse_args()
+
     rows = []
     for n_kernels in (1, 4):
         with tempfile.TemporaryDirectory() as d:
             path = os.path.join(d, "tuned.json")
-            cold = run_process(path, n_kernels)
-            warm = run_process(path, n_kernels)
+            cold = run_process(path, n_kernels, strategy=args.strategy)
+            warm = run_process(path, n_kernels, strategy=args.strategy)
         for phase, r in (("cold", cold), ("warm", warm)):
             ttb = [v for v in r["time_to_best_s"].values() if v is not None]
             rtb = [v for v in r["regens_to_best"].values() if v is not None]

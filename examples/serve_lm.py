@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import REGISTRY
+from repro.core import available_strategies
 from repro.runtime.serve_loop import (
     ServeConfig, generate, make_serve_coordinator)
 
@@ -32,11 +33,21 @@ def main() -> None:
     ap.add_argument("--autotune", action="store_true")
     ap.add_argument("--requests", type=int, default=1)
     ap.add_argument("--registry", default=None)
+    ap.add_argument("--strategy", default="two_phase",
+                    choices=available_strategies(),
+                    help="search strategy for the serve tuners")
+    ap.add_argument("--seq-buckets", dest="seq_buckets",
+                    action="store_true", default=True,
+                    help="pow2-bucket seq/max_len tuner keys (default)")
+    ap.add_argument("--no-seq-buckets", dest="seq_buckets",
+                    action="store_false")
     args = ap.parse_args()
 
     cfg = REGISTRY[args.arch].reduced()
     serve = ServeConfig(max_new_tokens=args.tokens, autotune=args.autotune,
-                        tune_max_overhead=0.2, registry_path=args.registry)
+                        tune_max_overhead=0.2, registry_path=args.registry,
+                        tune_strategy=args.strategy,
+                        seq_buckets=args.seq_buckets)
     coordinator = make_serve_coordinator(serve) if args.autotune else None
 
     for req in range(args.requests):
@@ -62,9 +73,14 @@ def main() -> None:
               f"total {time.perf_counter()-t0:.1f}s")
         if args.autotune:
             a = out["autotune"]
-            print(f"  tuning: {a['regenerations']} regens {a['swaps']} swaps "
+            lc = a["lifecycle"]
+            print(f"  tuning[{args.strategy}]: "
+                  f"{a['regenerations']} regens {a['swaps']} swaps "
                   f"overhead {a['overhead_frac']*100:.1f}% "
-                  f"(budget {a['budget_s']*1e3:.0f} ms)")
+                  f"(budget {a['budget_s']*1e3:.0f} ms, "
+                  f"init {a['init_spent_s']*1e3:.0f} ms) "
+                  f"tuners {a['n_kernels']} "
+                  f"({lc['converged']} converged {lc['retired']} retired)")
     if args.requests > 0:
         print("first sequence:", out["tokens"][0].tolist())
 

@@ -5,7 +5,11 @@ Public API re-exports.
 
 from repro.core.autotuner import OnlineAutotuner
 from repro.core.compilette import Compilette, GeneratedKernel
-from repro.core.decision import RegenerationPolicy, TuningAccounts
+from repro.core.decision import (
+    LatencyHeadroomGate,
+    RegenerationPolicy,
+    TuningAccounts,
+)
 from repro.core.evaluator import (
     Evaluator,
     Measurement,
@@ -16,16 +20,36 @@ from repro.core.evaluator import (
     mean_real_time,
     virtual_kernel,
 )
-from repro.core.explorer import TwoPhaseExplorer
-from repro.core.persistence import TunedRegistry
+from repro.core.explorer import (
+    GreedyNeighborhood,
+    RandomSearch,
+    SearchStrategy,
+    TwoPhaseExplorer,
+    available_strategies,
+    make_strategy,
+    register_strategy,
+)
+from repro.core.persistence import (
+    TunedRegistry,
+    compiler_version,
+    device_fallbacks,
+    device_fingerprint,
+)
 from repro.core.profiles import ALL_PROFILES, EQUIVALENT_PAIRS, TPU_V5E, DeviceProfile
 from repro.core.static_tuner import static_autotune
-from repro.core.tuning_space import Param, Point, TuningSpace, product_space
+from repro.core.tuning_space import (
+    Param,
+    Point,
+    TuningSpace,
+    clamped_options,
+    product_space,
+)
 
 __all__ = [
     "OnlineAutotuner",
     "Compilette",
     "GeneratedKernel",
+    "LatencyHeadroomGate",
     "RegenerationPolicy",
     "TuningAccounts",
     "Evaluator",
@@ -36,8 +60,17 @@ __all__ = [
     "filtered_training_time",
     "mean_real_time",
     "virtual_kernel",
+    "SearchStrategy",
     "TwoPhaseExplorer",
+    "RandomSearch",
+    "GreedyNeighborhood",
+    "available_strategies",
+    "make_strategy",
+    "register_strategy",
     "TunedRegistry",
+    "compiler_version",
+    "device_fallbacks",
+    "device_fingerprint",
     "ALL_PROFILES",
     "EQUIVALENT_PAIRS",
     "TPU_V5E",
@@ -46,5 +79,6 @@ __all__ = [
     "Param",
     "Point",
     "TuningSpace",
+    "clamped_options",
     "product_space",
 ]

@@ -2,10 +2,12 @@
 
 At program start a *reference function* is evaluated and becomes the active
 function. The tuning thread periodically wakes up; if the regeneration
-policy grants budget, it asks the two-phase explorer for the next variant,
-generates it with the compilette (run-time machine-code generation),
-evaluates it, and **swaps the active function pointer** when the new score
-is better.
+policy grants budget, it asks the search strategy (the paper's two-phase
+explorer by default; any name in the :mod:`repro.core.explorer` registry —
+``strategy="random"``, ``"greedy"``, ... — or a pre-built instance) for the
+next variant, generates it with the compilette (run-time machine-code
+generation), evaluates it, and **swaps the active function pointer** when
+the new score is better.
 
 Three scheduling modes:
 
@@ -36,7 +38,7 @@ from typing import Any, Callable, Sequence
 from repro.core.compilette import Compilette, GeneratedKernel
 from repro.core.decision import RegenerationPolicy, TuningAccounts
 from repro.core.evaluator import Measurement
-from repro.core.explorer import TwoPhaseExplorer
+from repro.core.explorer import SearchStrategy, make_strategy
 from repro.core.tuning_space import Point
 
 # An external arbiter for regeneration budget (the coordinator's shared
@@ -66,7 +68,8 @@ class OnlineAutotuner:
         base_point: Point | None = None,
         seed_points: Sequence[Point] = (),
         wake_every: int | None = 16,
-        explorer: TwoPhaseExplorer | None = None,
+        strategy: "str | SearchStrategy" = "two_phase",
+        explorer: SearchStrategy | None = None,
         clock: Callable[[], float] | None = None,
         budget_gate: BudgetGate | None = None,
     ) -> None:
@@ -76,8 +79,11 @@ class OnlineAutotuner:
         self.specialization = dict(specialization or {})
         self._clock = clock or time.perf_counter
         self._budget_gate = budget_gate
-        self.explorer = explorer or TwoPhaseExplorer(
-            compilette.space, base_point=base_point, seed_points=seed_points
+        # `explorer` (a pre-built instance) wins over `strategy` (a registry
+        # name or instance); both default to the paper's two-phase order.
+        self.explorer = explorer or make_strategy(
+            strategy, compilette.space,
+            base_point=base_point, seed_points=seed_points,
         )
         self.accounts = TuningAccounts(app_start_s=self._clock())
         self._lock = threading.Lock()
@@ -101,7 +107,14 @@ class OnlineAutotuner:
         if reference_score_s is None:
             m = self.evaluator.evaluate(reference_fn)
             reference_score_s = m.score_s
-            self.accounts.init_spent_s += m.eval_time_s
+            # Charge the *marginal* instrumentation cost: the measurement
+            # runs themselves. m.eval_time_s additionally bundles one-time
+            # reference compilation, which is normal app work the first
+            # real call would have paid anyway (paper §3.3) — charging it
+            # would suppress serving-path tuning (charge_init policies)
+            # for far longer than the instrumentation actually cost.
+            self.accounts.init_spent_s += min(
+                m.eval_time_s, m.score_s * m.n_runs)
         self.reference_score_s = reference_score_s
         self._active: Callable[..., Any] = reference_fn
         self._active_life = KernelLife(point=None, score_s=reference_score_s)
@@ -131,10 +144,21 @@ class OnlineAutotuner:
 
     # ------------------------------------------------------------ gains
     def _update_gains(self) -> None:
+        """Refresh the derived accounting: gains and busy time.
+
+        Both use the paper's instrumentation-light estimate — the only
+        per-call record is a counter, so busy time is calls x measured
+        per-call score accumulated over active-kernel tenures (exact under
+        the VirtualClock, an estimate on real hardware).
+        """
         gained = 0.0
+        busy = 0.0
         for life in self._lives:
             gained += life.calls * (self.reference_score_s - life.score_s)
+            busy += life.calls * life.score_s
         self.accounts.gained_s = gained
+        self.accounts.busy_s = busy
+        self.accounts.observed_call_s = self._active_life.score_s
 
     # ------------------------------------------------------------ wake-up
     def wake(self) -> bool:
@@ -220,6 +244,7 @@ class OnlineAutotuner:
         self._update_gains()
         elapsed = self._clock() - self.accounts.app_start_s
         return {
+            "strategy": self.explorer.name,
             "kernel_calls": self.accounts.kernel_calls,
             "regenerations": self.accounts.regenerations,
             "swaps": self.accounts.swaps,

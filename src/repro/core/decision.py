@@ -1,4 +1,4 @@
-"""Regeneration decision (paper §3.3).
+"""Regeneration decision (paper §3.3, extended for serving).
 
 Two factors decide whether the auto-tuning thread may generate+evaluate a
 new variant when it wakes up:
@@ -15,6 +15,19 @@ Gain estimation (paper §3.3): the only instrumentation is a counter of
 kernel invocations; gained time = calls_since_swap × (t_reference − t_active)
 accumulated over active-kernel lifetimes. Reference and variants are timed
 once each, so gains are estimates, acceptable per the paper.
+
+Serving extensions (the paper tunes a busy batch process; a server idles):
+
+  * ``budget_from="busy"`` budgets from **busy time** — kernel-call time
+    actually observed (calls × per-call score, same instrumentation-light
+    estimate as gains) — instead of lifetime wall-clock, so a long-idle
+    server accrues no budget it could burst onto one request.
+  * ``charge_init=True`` charges the register()-time reference measurement
+    (``init_spent_s``) against the budget: on a request path that init
+    work is tuning overhead like any other.
+  * an optional :class:`LatencyHeadroomGate` skips regeneration when the
+    per-call latency headroom under an SLO is too thin to absorb one more
+    generate+evaluate cycle.
 """
 
 from __future__ import annotations
@@ -28,12 +41,42 @@ class TuningAccounts:
 
     app_start_s: float = 0.0            # perf_counter at app start
     tuning_spent_s: float = 0.0         # total generation+evaluation time
-    init_spent_s: float = 0.0           # reference baseline measurement (not
-                                        # budgeted: it is normal app work)
+    init_spent_s: float = 0.0           # reference baseline measurement
+                                        # (budgeted only when the policy
+                                        # sets charge_init)
     gained_s: float = 0.0               # estimated saved time so far
+    busy_s: float = 0.0                 # estimated kernel-call time observed
+                                        # (calls x per-call score)
+    observed_call_s: float = 0.0        # per-call score of the active kernel
     kernel_calls: int = 0               # invocation counter (instrumentation)
     regenerations: int = 0              # variants generated+evaluated
     swaps: int = 0                      # active-function replacements
+
+
+@dataclasses.dataclass(frozen=True)
+class LatencyHeadroomGate:
+    """SLO-aware regeneration gate for latency-critical paths.
+
+    ``slo_s`` is the per-call latency objective of the tuned kernel (e.g.
+    the per-token decode budget). Regeneration is allowed only when the
+    active kernel leaves at least ``min_headroom_frac`` of the SLO as
+    headroom AND the next generate+evaluate cycle is estimated to fit in
+    that headroom — so tuning never lands on a request that is already
+    close to its SLO.
+    """
+
+    slo_s: float
+    min_headroom_frac: float = 0.25
+
+    def allows(
+        self, observed_call_s: float, next_cost_estimate_s: float
+    ) -> bool:
+        if self.slo_s <= 0.0:
+            return True
+        headroom_s = self.slo_s - observed_call_s
+        if headroom_s < self.min_headroom_frac * self.slo_s:
+            return False
+        return next_cost_estimate_s <= headroom_s
 
 
 @dataclasses.dataclass(frozen=True)
@@ -42,13 +85,56 @@ class RegenerationPolicy:
 
     max_overhead_frac: float = 0.01     # e.g. 1 % of app runtime
     invest_frac: float = 0.10           # e.g. reinvest 10 % of gained time
+    budget_from: str = "wall"           # "wall" (paper) | "busy" (serving)
+    charge_init: bool = False           # budget the reference measurement
+    headroom: LatencyHeadroomGate | None = None
+
+    def __post_init__(self) -> None:
+        if self.budget_from not in ("wall", "busy"):
+            raise ValueError(
+                f"budget_from must be 'wall' or 'busy', "
+                f"got {self.budget_from!r}")
 
     def budget_s(self, accounts: TuningAccounts, now_s: float) -> float:
         """Time the tuner is currently allowed to have spent in total."""
-        elapsed = max(now_s - accounts.app_start_s, 0.0)
+        if self.budget_from == "busy":
+            elapsed = max(accounts.busy_s, 0.0)
+        else:
+            elapsed = max(now_s - accounts.app_start_s, 0.0)
         base = self.max_overhead_frac * elapsed
         investment = self.invest_frac * max(accounts.gained_s, 0.0)
         return base + investment
+
+    def spent_s(self, accounts: TuningAccounts) -> float:
+        """Tuning time charged against the budget."""
+        spent = accounts.tuning_spent_s
+        if self.charge_init:
+            spent += accounts.init_spent_s
+        return spent
+
+    def headroom_allows(
+        self, accounts: TuningAccounts, next_cost_estimate_s: float = 0.0
+    ) -> bool:
+        """SLO gate against the per-call latency recorded in ``accounts``.
+
+        Headroom is a property of ONE kernel's latency, so multi-kernel
+        schedulers must gate on the candidate kernel's accounts (not an
+        aggregate: the max over kernels would let a slow prefill veto
+        tuning of a fast decode forever).
+        """
+        return self.headroom is None or self.headroom.allows(
+            accounts.observed_call_s, next_cost_estimate_s)
+
+    def budget_allows(
+        self,
+        accounts: TuningAccounts,
+        now_s: float,
+        next_cost_estimate_s: float = 0.0,
+    ) -> bool:
+        return (
+            self.spent_s(accounts) + next_cost_estimate_s
+            <= self.budget_s(accounts, now_s)
+        )
 
     def should_regenerate(
         self,
@@ -58,6 +144,6 @@ class RegenerationPolicy:
     ) -> bool:
         """True when generating+evaluating one more variant fits the budget."""
         return (
-            accounts.tuning_spent_s + next_cost_estimate_s
-            <= self.budget_s(accounts, now_s)
+            self.headroom_allows(accounts, next_cost_estimate_s)
+            and self.budget_allows(accounts, now_s, next_cost_estimate_s)
         )

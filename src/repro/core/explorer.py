@@ -1,25 +1,55 @@
-"""Two-phase online space exploration (paper §3.3).
+"""Search strategies for online exploration of the tuning space.
 
-Phase 1 explores the parameters that change the *structure* of the code
-(unrolling factors, vector length, vectorization), in order from the least
-switched to the most switched parameter. Within phase 1, variants with **no
-leftover code** are explored first; once exhausted, the condition is
-softened by gradually admitting variants with more leftover work.
+The paper's two-phase explorer (§3.3) is ONE strategy among several: the
+Kernel Tuning Toolkit (arXiv:1910.08498) and "Tuning the Tuner"
+(arXiv:2505.03979) both treat the searcher as an interchangeable component
+behind a single propose/report API. This module provides that API:
 
-Phase 2 freezes the best phase-1 parameters and explores the combinatorial
-choices of the remaining codegen options (instruction scheduling, stack
-minimization, prefetch stride).
+  * :class:`SearchStrategy` — the protocol every searcher implements:
+    ``next_point() -> Point | None`` (pull-based proposal; ``None`` when
+    exhausted), ``report(point, score_s) -> bool`` (feed a measurement
+    back; True when it is the new best) and the ``finished`` property.
+    The base class centralizes seen-point deduplication (a strategy never
+    re-proposes a point), best tracking, history, warm-start seed points
+    and the ``run_to_completion`` driver.
+  * a **string-keyed registry** — strategies self-register under a name:
 
-The explorer is *pull-based*: the auto-tuner asks for ``next_point()`` only
-when the regeneration policy grants budget, and feeds results back through
-``report(point, score)``.
+        @register_strategy("my_search")
+        class MySearch(SearchStrategy):
+            def _propose(self) -> Point | None: ...
+            def _observe(self, point, score_s, improved) -> None: ...
+
+    ``make_strategy("my_search", space, ...)`` then builds one, and every
+    consumer (``OnlineAutotuner(strategy="my_search")``,
+    ``static_autotune``, the ``TuningCoordinator``, the serve/train loops
+    and their CLI ``--strategy`` flags) accepts the name with no further
+    plumbing. Implement ``_propose`` (return a candidate or ``None``;
+    duplicates are filtered by the base class, so proposing an
+    already-seen point is safe and simply asks ``_propose`` again) and
+    optionally ``_observe`` (react to a measurement, e.g. recenter a
+    neighborhood).
+
+Built-in strategies:
+
+  * ``two_phase`` (:class:`TwoPhaseExplorer`, the default) — the paper's
+    order: phase 1 explores structural parameters least→most switched,
+    leftover-free variants first; phase 2 freezes the phase-1 winner and
+    explores the remaining codegen options combinatorially.
+  * ``random`` (:class:`RandomSearch`) — a deterministic shuffle of the
+    valid points (seeded), the classic baseline that "Tuning the Tuner"
+    shows is surprisingly hard to beat on small spaces.
+  * ``greedy`` (:class:`GreedyNeighborhood`) — hill-climbing: vary one
+    parameter at a time around the incumbent best, recenter on
+    improvement, and restart from an unseen point at local optima (so
+    small spaces are still covered exhaustively).
 """
 
 from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import Any, Iterator, Sequence
+import random as _random
+from typing import Any, Callable, Iterator, Sequence
 
 from repro.core.tuning_space import Point, TuningSpace
 
@@ -41,7 +71,18 @@ class ExplorerState:
     finished: bool = False
 
 
-class TwoPhaseExplorer:
+class SearchStrategy:
+    """Base class for pull-based search strategies.
+
+    The auto-tuner asks for ``next_point()`` only when the regeneration
+    policy grants budget, and feeds results back through
+    ``report(point, score_s)``. Subclasses implement ``_propose`` (and
+    optionally ``_observe``); deduplication, best tracking and warm-start
+    seeds are handled here.
+    """
+
+    name: str = "base"
+
     def __init__(
         self,
         space: TuningSpace,
@@ -49,7 +90,7 @@ class TwoPhaseExplorer:
         seed_points: "Sequence[Point]" = (),
     ) -> None:
         self.space = space
-        # Initial state of non-phase-1 parameters: pre-profiled defaults.
+        # Initial state of unexplored parameters: pre-profiled defaults.
         # A supplied base point is merged OVER the defaults and restricted
         # to known parameters, so a stale persisted point (from an older
         # space definition) degrades gracefully instead of producing
@@ -62,8 +103,8 @@ class TwoPhaseExplorer:
         self.state = ExplorerState()
         self.best_point: Point | None = None
         self.best_score: float = float("inf")
+        self.history: list[tuple[Point, float]] = []
         self._seen: set[tuple] = set()
-        self._pending: Point | None = None
         # Warm-start: seed points (e.g. a persisted best from a previous
         # run) are proposed before any enumeration, so a warm process
         # re-validates its known-best variant with a single regeneration.
@@ -71,11 +112,132 @@ class TwoPhaseExplorer:
             dict(p) for p in seed_points
             if space.contains(p) and space.is_valid(p)
         ]
+
+    # ---------------------------------------------------- subclass hooks
+    def _propose(self) -> Point | None:
+        """Next candidate (may repeat a seen point) or None when done."""
+        raise NotImplementedError
+
+    def _observe(self, point: Point, score_s: float, improved: bool) -> None:
+        """React to a reported measurement (e.g. recenter a neighborhood)."""
+
+    # ------------------------------------------------------------------ api
+    def next_point(self) -> Point | None:
+        """Next variant to generate+evaluate, or None when done.
+
+        Never yields the same point twice (``_propose`` duplicates are
+        swallowed here) and never yields a hole.
+        """
+        if self.state.finished:
+            return None
+        while True:
+            point = self._propose()
+            if point is None:
+                self.state.finished = True
+                return None
+            key = self.space.key(point)
+            if key in self._seen:
+                continue
+            self._seen.add(key)
+            self.state.n_proposed += 1
+            return dict(point)
+
+    def report(self, point: Point, score_s: float) -> bool:
+        """Feed a measurement back; returns True if it is the new best."""
+        self.state.n_reported += 1
+        self.history.append((dict(point), score_s))
+        improved = score_s < self.best_score
+        if improved:
+            self.best_score = score_s
+            self.best_point = dict(point)
+        self._observe(point, score_s, improved)
+        return improved
+
+    @property
+    def finished(self) -> bool:
+        return self.state.finished
+
+    def run_to_completion(
+        self, evaluate, max_points: int | None = None
+    ) -> tuple[Point | None, float]:
+        """Exhaust the exploration with ``evaluate(point) -> seconds``.
+
+        Used by the static tuner and the simulated-platform studies; the
+        online auto-tuner instead paces itself with the regeneration policy.
+        """
+        n = 0
+        while max_points is None or n < max_points:
+            point = self.next_point()
+            if point is None:
+                break
+            self.report(point, evaluate(point))
+            n += 1
+        return self.best_point, self.best_score
+
+
+# --------------------------------------------------------------- registry
+STRATEGIES: dict[str, type[SearchStrategy]] = {}
+
+
+def register_strategy(name: str) -> Callable[[type], type]:
+    """Class decorator: register a :class:`SearchStrategy` under ``name``."""
+
+    def deco(cls: type) -> type:
+        cls.name = name
+        STRATEGIES[name] = cls
+        return cls
+
+    return deco
+
+
+def available_strategies() -> tuple[str, ...]:
+    return tuple(sorted(STRATEGIES))
+
+
+def make_strategy(
+    strategy: "str | SearchStrategy",
+    space: TuningSpace,
+    *,
+    base_point: Point | None = None,
+    seed_points: Sequence[Point] = (),
+    **kwargs: Any,
+) -> SearchStrategy:
+    """Resolve a strategy name (or pass through an instance)."""
+    if not isinstance(strategy, str):
+        return strategy
+    try:
+        cls = STRATEGIES[strategy]
+    except KeyError:
+        raise ValueError(
+            f"unknown search strategy {strategy!r}; "
+            f"available: {', '.join(available_strategies())}"
+        ) from None
+    return cls(space, base_point=base_point, seed_points=seed_points, **kwargs)
+
+
+# -------------------------------------------------------------- two-phase
+@register_strategy("two_phase")
+class TwoPhaseExplorer(SearchStrategy):
+    """The paper's two-phase exploration (§3.3), the default strategy.
+
+    Phase 1 explores the parameters that change the *structure* of the
+    code (unrolling factors, vector length, vectorization), in order from
+    the least switched to the most switched parameter; variants with no
+    leftover code first, then gradually softening. Phase 2 freezes the
+    best phase-1 parameters and explores the combinatorial choices of the
+    remaining codegen options.
+    """
+
+    def __init__(
+        self,
+        space: TuningSpace,
+        base_point: Point | None = None,
+        seed_points: "Sequence[Point]" = (),
+    ) -> None:
+        super().__init__(space, base_point=base_point, seed_points=seed_points)
         self._phase1_iter = self._make_phase1_iter()
         self._phase2_iter: Iterator[Point] | None = None
-        self.history: list[tuple[Point, float]] = []
 
-    # ------------------------------------------------------------- ordering
     def _make_phase1_iter(self) -> Iterator[Point]:
         # Enumerate in least→most switched order, then stable-sort by
         # leftover rank: leftover-free first, gradually softening.
@@ -84,7 +246,7 @@ class TwoPhaseExplorer:
             if self.space.is_valid(p)
         ]
         candidates.sort(key=lambda p: _leftover_rank(self.space, p))
-        return itertools.chain(self._seeds, candidates)
+        return itertools.chain(iter(self._seeds), iter(candidates))
 
     def _make_phase2_iter(self) -> Iterator[Point]:
         assert self.best_point is not None
@@ -94,59 +256,110 @@ class TwoPhaseExplorer:
         ]
         return iter(candidates)
 
-    # ------------------------------------------------------------------ api
-    def next_point(self) -> Point | None:
-        """Next variant to generate+evaluate, or None when done."""
-        if self.state.finished:
-            return None
-        it = self._phase1_iter if self.state.phase == 1 else self._phase2_iter
-        assert it is not None
+    def _propose(self) -> Point | None:
         while True:
+            it = (self._phase1_iter if self.state.phase == 1
+                  else self._phase2_iter)
+            assert it is not None
             try:
-                point = next(it)
+                return next(it)
             except StopIteration:
                 if self.state.phase == 1:
                     if self.best_point is None:
                         # nothing valid at all
-                        self.state.finished = True
                         return None
                     self.state.phase = 2
                     self._phase2_iter = self._make_phase2_iter()
-                    it = self._phase2_iter
                     continue
-                self.state.finished = True
                 return None
-            key = self.space.key(point)
-            if key in self._seen:
-                continue
-            self._seen.add(key)
-            self.state.n_proposed += 1
-            self._pending = point
-            return dict(point)
 
-    def report(self, point: Point, score_s: float) -> bool:
-        """Feed a measurement back; returns True if it is the new best."""
-        self.state.n_reported += 1
-        self.history.append((dict(point), score_s))
-        if score_s < self.best_score:
-            self.best_score = score_s
-            self.best_point = dict(point)
-            return True
-        return False
 
-    @property
-    def finished(self) -> bool:
-        return self.state.finished
+# ----------------------------------------------------------------- random
+@register_strategy("random")
+class RandomSearch(SearchStrategy):
+    """Uniform random order over the valid points (deterministic seed).
 
-    def run_to_completion(self, evaluate) -> tuple[Point | None, float]:
-        """Exhaust the exploration with ``evaluate(point) -> seconds``.
+    Seed points are proposed first (warm start), then the remaining valid
+    points in a seeded shuffle. On small spaces this is exhaustive; on
+    large spaces it is the classic unbiased baseline.
+    """
 
-        Used by the static tuner and the simulated-platform studies; the
-        online auto-tuner instead paces itself with the regeneration policy.
-        """
+    def __init__(
+        self,
+        space: TuningSpace,
+        base_point: Point | None = None,
+        seed_points: "Sequence[Point]" = (),
+        *,
+        rng_seed: int = 0,
+    ) -> None:
+        super().__init__(space, base_point=base_point, seed_points=seed_points)
+        candidates = list(space.iter_valid())
+        _random.Random(rng_seed).shuffle(candidates)
+        self._iter: Iterator[Point] = itertools.chain(
+            iter(self._seeds), iter(candidates))
+
+    def _propose(self) -> Point | None:
+        return next(self._iter, None)
+
+
+# ----------------------------------------------------------------- greedy
+@register_strategy("greedy")
+class GreedyNeighborhood(SearchStrategy):
+    """Hill-climb over one parameter at a time.
+
+    Starting from the base point (or a warm-start seed), propose every
+    single-parameter variation of the incumbent best; whenever a
+    measurement improves the best, the neighborhood recenters there. At a
+    local optimum (no unseen neighbor left) the search restarts from the
+    first unseen valid point, so a small space is still covered
+    exhaustively and the strategy converges to the global optimum on it.
+    """
+
+    def __init__(
+        self,
+        space: TuningSpace,
+        base_point: Point | None = None,
+        seed_points: "Sequence[Point]" = (),
+    ) -> None:
+        super().__init__(space, base_point=base_point, seed_points=seed_points)
+        self._queue: list[Point] = list(self._seeds)
+        if space.is_valid(self.base_point):
+            self._queue.append(dict(self.base_point))
+        self._frontier_key: tuple | None = None   # neighborhood already queued
+
+    def _neighbors(self, point: Point) -> Iterator[Point]:
+        for p in self.space.params:
+            for v in p.values:
+                if v == point[p.name]:
+                    continue
+                q = dict(point)
+                q[p.name] = v
+                if self.space.is_valid(q):
+                    yield q
+
+    def _observe(self, point: Point, score_s: float, improved: bool) -> None:
+        if improved:
+            # recenter: pending neighbors of the old incumbent are stale
+            # (any still-unseen ones are recovered by the restart scan)
+            self._queue.clear()
+
+    def _propose(self) -> Point | None:
         while True:
-            point = self.next_point()
-            if point is None:
-                break
-            self.report(point, evaluate(point))
-        return self.best_point, self.best_score
+            if self._queue:
+                return self._queue.pop(0)
+            if self.best_point is not None:
+                key = self.space.key(self.best_point)
+                if key != self._frontier_key:
+                    self._frontier_key = key
+                    self._queue.extend(
+                        q for q in self._neighbors(self.best_point)
+                        if self.space.key(q) not in self._seen
+                    )
+                    if self._queue:
+                        continue
+            # local optimum (or nothing measured yet): restart from the
+            # first unseen valid point, if any
+            for q in self.space.iter_valid():
+                if self.space.key(q) not in self._seen:
+                    return q
+            return None

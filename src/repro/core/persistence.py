@@ -5,6 +5,12 @@ stored as JSON. The training loop saves the registry next to checkpoints so
 a restarted (or elastically re-scaled) job resumes with the tuned kernels
 instead of re-exploring — run-time auto-tuning state is part of the fault-
 tolerance story.
+
+The device key is a *fingerprint* ``platform:device_kind:compiler`` — a
+tuned point is only transferable between identical devices compiled by the
+same jax/jaxlib, so entries persisted under an older compiler simply miss
+(cold start) instead of warm-starting a stale point. Registries written by
+older layouts are still honoured through :func:`device_fallbacks`.
 """
 
 from __future__ import annotations
@@ -20,6 +26,56 @@ from repro.core.tuning_space import Point
 
 def _canon(obj: Any) -> str:
     return json.dumps(obj, sort_keys=True, separators=(",", ":"))
+
+
+def compiler_version() -> str:
+    """jax/jaxlib version pair: tuned points do not survive the compiler."""
+    try:
+        import jax
+
+        jver = getattr(jax, "__version__", "unknown")
+        try:
+            import jaxlib
+
+            lver = getattr(jaxlib, "__version__", jver)
+        except Exception:
+            lver = jver
+        return f"jax{jver}-jaxlib{lver}"
+    except Exception:
+        return "nojax"
+
+
+def device_fingerprint() -> str:
+    """Stable identity of the accelerator the process is tuning for.
+
+    Tuned points are only transferable between identical devices under
+    the same compiler, so the registry key includes platform, device kind
+    and the jax/jaxlib version.
+    """
+    try:
+        import jax
+
+        d = jax.devices()[0]
+        return f"{d.platform}:{d.device_kind}:{compiler_version()}"
+    except Exception:
+        return "unknown"
+
+
+def device_fallbacks(device: str) -> tuple[str, ...]:
+    """Legacy registry keys to try after an exact-fingerprint miss.
+
+    Older layouts keyed entries by ``platform:device_kind`` (pre
+    compiler-version) or by bare ``device_kind`` (pre-coordinator). Both
+    remain readable; entries that DO carry a compiler version only match
+    exactly, so a compiler upgrade degrades them to a cold start.
+    """
+    parts = device.split(":")
+    out: list[str] = []
+    if len(parts) >= 3:
+        out.append(":".join(parts[:2]))   # platform:device_kind
+    if len(parts) >= 2:
+        out.append(parts[1])              # bare device_kind
+    return tuple(out)
 
 
 class TunedRegistry:
@@ -43,13 +99,17 @@ class TunedRegistry:
         device: str,
         point: Point,
         score_s: float,
+        strategy: str | None = None,
     ) -> None:
         k = self.key(kernel, specialization, device)
         with self._mu:
             cur = self._table.get(k)
             if cur is None or score_s < cur["score_s"]:
-                self._table[k] = {
-                    "point": dict(point), "score_s": float(score_s)}
+                entry = {"point": dict(point), "score_s": float(score_s)}
+                if strategy is not None:
+                    # provenance: which search strategy found this best
+                    entry["strategy"] = str(strategy)
+                self._table[k] = entry
 
     def get(
         self, kernel: str, specialization: dict[str, Any], device: str
@@ -57,6 +117,19 @@ class TunedRegistry:
         with self._mu:
             entry = self._table.get(self.key(kernel, specialization, device))
             return dict(entry["point"]) if entry else None
+
+    def get_warm(
+        self, kernel: str, specialization: dict[str, Any], device: str
+    ) -> Point | None:
+        """Exact-fingerprint lookup, then the legacy-key fallback chain."""
+        point = self.get(kernel, specialization, device)
+        if point is not None:
+            return point
+        for legacy in device_fallbacks(device):
+            point = self.get(kernel, specialization, legacy)
+            if point is not None:
+                return point
+        return None
 
     def __len__(self) -> int:
         with self._mu:

@@ -24,11 +24,31 @@ def static_autotune(
     only_no_leftover: bool = False,
     max_points: int | None = None,
     score_fn: Callable[[Point], float] | None = None,
+    strategy: str | None = None,
 ) -> tuple[Point | None, float, list[tuple[Point, float]]]:
-    """Returns (best_point, best_score_s, full history)."""
-    from repro.core.explorer import _leftover_rank
+    """Returns (best_point, best_score_s, full history).
+
+    With ``strategy`` (a name from the :mod:`repro.core.explorer`
+    registry) the exploration order is delegated to that strategy instead
+    of the exhaustive scan; ``only_no_leftover`` applies only to the
+    exhaustive scan.
+    """
+    from repro.core.explorer import _leftover_rank, make_strategy
 
     specialization = dict(specialization or {})
+
+    def measure(point: Point) -> float:
+        if score_fn is not None:
+            return score_fn(point)
+        kern = compilette.generate(point, **specialization)
+        return evaluator.evaluate(kern.fn).score_s
+
+    if strategy is not None:
+        strat = make_strategy(strategy, compilette.space)
+        best_point, best_score = strat.run_to_completion(
+            measure, max_points=max_points)
+        return best_point, best_score, list(strat.history)
+
     history: list[tuple[Point, float]] = []
     best_point: Point | None = None
     best_score = float("inf")
@@ -41,11 +61,7 @@ def static_autotune(
         if max_points is not None and n >= max_points:
             break
         n += 1
-        if score_fn is not None:
-            score = score_fn(point)
-        else:
-            kern = compilette.generate(point, **specialization)
-            score = evaluator.evaluate(kern.fn).score_s
+        score = measure(point)
         history.append((dict(point), score))
         if score < best_score:
             best_score = score

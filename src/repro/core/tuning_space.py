@@ -145,3 +145,15 @@ class TuningSpace:
 
 def product_space(params: Sequence[Param], **kwargs) -> TuningSpace:
     return TuningSpace(params=tuple(params), **kwargs)
+
+
+def clamped_options(options: Sequence[int], bound: int) -> tuple[int, ...]:
+    """Deduplicate integer options past ``bound``.
+
+    Chunk/tile sizes larger than the problem extent all compile to the
+    same program, so a space built from raw option lists would contain
+    duplicate variants — and re-measuring duplicates wastes the shared
+    regeneration budget. Used by the serve/train compilettes to bound
+    chunk options by the (bucketed) sequence length.
+    """
+    return tuple(sorted({min(int(v), int(bound)) for v in options}))

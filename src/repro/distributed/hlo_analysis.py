@@ -23,9 +23,7 @@ padding waste.
 from __future__ import annotations
 
 import dataclasses
-import math
 import re
-from typing import Iterable
 
 _DTYPE_BYTES = {
     "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1,
@@ -256,7 +254,6 @@ def analyze_hlo(text: str, entry: str | None = None) -> Totals:
         stack2 = stack | {name}
         for op in comp.ops:
             if op.opcode == "while":
-                body = None
                 m = re.search(r"body=%?([\w.\-]+)", op.line)
                 c = _COND_ATTR_RE.search(op.line)
                 trips = 1.0

@@ -12,7 +12,6 @@ is intentionally not part of the 40-cell dry-run matrix (see DESIGN.md §5).
 
 from __future__ import annotations
 
-import functools
 from typing import Callable
 
 import jax

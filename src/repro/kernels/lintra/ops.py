@@ -68,7 +68,6 @@ def generate_jnp_variant(point: Point, *, bands: int, width: int):
     the compilette inlines them — most of the observed speedup. We mirror
     that: variants close over `a`/`b` handling strategy.
     """
-    bh = point["block_h"]
     unroll = point["unroll"]
     vect = bool(point["vectorize"])
     n_strips = unroll

@@ -6,7 +6,6 @@ import math
 from typing import Any
 
 import jax
-import jax.numpy as jnp
 
 from repro.core.compilette import Compilette
 from repro.core.profiles import TPU_V5E, DeviceProfile

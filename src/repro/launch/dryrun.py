@@ -27,7 +27,7 @@ jax.config.update("jax_compilation_cache_dir", "/root/repo/.jax_cache")
 jax.config.update("jax_persistent_cache_min_compile_time_secs", 1.0)
 
 from repro.configs import REGISTRY, ALL_SHAPES
-from repro.distributed.roofline import collective_stats, roofline_from
+from repro.distributed.roofline import roofline_from
 from repro.launch.mesh import make_production_mesh, set_mesh
 from repro.launch.shapes import build_cell, skip_reason
 

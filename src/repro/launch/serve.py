@@ -7,12 +7,17 @@ With ``--autotune`` the prefill and decode step-programs are tuned online
 by the process-wide TuningCoordinator; ``--requests N`` issues N identical
 requests through ONE coordinator, so later requests ride the variants the
 earlier ones discovered (and ``--registry`` persists them across restarts).
+``--strategy`` picks the search strategy (two_phase/random/greedy/...),
+``--seq-buckets/--no-seq-buckets`` controls power-of-two bucketing of the
+per-shape serve tuners.
 """
 
 import argparse
 
 
 def main() -> None:
+    from repro.core import available_strategies
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--reduced", action="store_true")
@@ -24,7 +29,19 @@ def main() -> None:
     ap.add_argument("--registry", default=None,
                     help="tuned-point registry path (warm-start)")
     ap.add_argument("--tune-overhead", type=float, default=0.05,
-                    help="serving overhead cap (fraction of wall time)")
+                    help="serving overhead cap (fraction of busy time)")
+    ap.add_argument("--strategy", default="two_phase",
+                    choices=available_strategies(),
+                    help="search strategy for every serve tuner")
+    ap.add_argument("--seq-buckets", dest="seq_buckets",
+                    action="store_true", default=True,
+                    help="pow2-bucket seq/max_len tuner keys (default)")
+    ap.add_argument("--no-seq-buckets", dest="seq_buckets",
+                    action="store_false",
+                    help="one tuner per exact (seq, batch) shape")
+    ap.add_argument("--slo", type=float, default=None,
+                    help="per-step latency SLO in seconds "
+                         "(headroom-gates tuning)")
     args = ap.parse_args()
 
     import jax
@@ -40,6 +57,9 @@ def main() -> None:
         max_new_tokens=args.tokens,
         autotune=args.autotune,
         tune_max_overhead=args.tune_overhead,
+        tune_strategy=args.strategy,
+        tune_slo_s=args.slo,
+        seq_buckets=args.seq_buckets,
         registry_path=args.registry,
     )
     coordinator = make_serve_coordinator(serve) if args.autotune else None
@@ -60,9 +80,13 @@ def main() -> None:
                 f"prefill {out['prefill_s']*1e3:.0f} ms")
         if args.autotune:
             a = out["autotune"]
-            line += (f"  [tuning: {a['regenerations']} regens, "
-                     f"{a['swaps']} swaps, "
-                     f"overhead {a['overhead_frac']*100:.1f}%]")
+            lc = a["lifecycle"]
+            line += (f"  [tuning({args.strategy}): "
+                     f"{a['regenerations']} regens, {a['swaps']} swaps, "
+                     f"overhead {a['overhead_frac']*100:.1f}%, "
+                     f"tuners {a['n_kernels']} "
+                     f"({lc['converged']} converged, "
+                     f"{lc['retired']} retired)]")
         print(line)
 
 

@@ -123,10 +123,8 @@ def model_flops(cfg: ModelConfig, shape: ShapeSpec) -> float:
     base = 2.0 * n_active * tokens
     attn = 0.0
     if cfg.family not in ("rwkv",):
-        d_kv = 2 * cfg.n_kv_heads * cfg.d_head
         eff_ctx = min(cfg.window, T) if cfg.window else T
         attn = 2.0 * cfg.n_layers * cfg.n_heads * cfg.d_head * eff_ctx * 2.0 * tokens
-        del d_kv
     if cfg.family in ("rwkv", "hybrid"):
         # state update ~ H·C² (rwkv) or di·state (ssm) per layer per token
         attn += 4.0 * cfg.n_layers * cfg.d_model * max(

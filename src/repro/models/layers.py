@@ -8,7 +8,6 @@ RoPE uses the interleaved-pair convention: the head dim is viewed as
 from __future__ import annotations
 
 import math
-from typing import Any
 
 import jax
 import jax.numpy as jnp

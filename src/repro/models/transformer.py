@@ -7,9 +7,6 @@ the 512-device dry-run host. Per-layer remat policy is configurable.
 
 from __future__ import annotations
 
-import functools
-from typing import Any
-
 import jax
 import jax.numpy as jnp
 

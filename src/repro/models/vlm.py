@@ -13,7 +13,6 @@ import math
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ModelConfig
 from repro.distributed.sharding import shard
 from repro.models import layers as L
 from repro.models.params import cast_params

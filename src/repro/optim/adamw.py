@@ -84,12 +84,10 @@ class AdamW:
             return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
 
         out = jax.tree.map(upd, params, grads, state["m"], state["v"])
-        leaves = jax.tree.leaves(out, is_leaf=lambda x: isinstance(x, tuple))
         new_params = jax.tree.map(
             lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
         new_m = jax.tree.map(
             lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
         new_v = jax.tree.map(
             lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
-        del leaves
         return new_params, {"m": new_m, "v": new_v, "step": step}, gnorm

@@ -23,7 +23,13 @@ the paper's economics across both dimensions:
     dynamic-autotuning service, arXiv:1910.08498);
   * **one tuning thread per process** — instead of one thread per
     kernel, a single coordinator thread (or cooperative ``maybe_pump``
-    calls on the hot path) drives every managed autotuner.
+    calls on the hot path) drives every managed autotuner;
+  * **a managed lifecycle** — a :class:`~repro.runtime.lifecycle.TunerLifecycle`
+    buckets shape-like specializations (so varied prompt lengths share
+    tuners), marks exhausted tuners ``CONVERGED`` (releasing their pinned
+    evaluator closures) and ``RETIRED``\\ s idle ones, unregistering them
+    while folding their accounting into a tombstone so the shared budget
+    stays honest.
 
 Time is read through an injectable ``clock`` (default
 ``time.perf_counter``); with a :class:`~repro.core.VirtualClock` the
@@ -36,35 +42,31 @@ import dataclasses
 import json
 import threading
 import time
-from typing import Any, Callable, Sequence
+from typing import Any, Callable
 
 from repro.core.autotuner import OnlineAutotuner
 from repro.core.compilette import Compilette
 from repro.core.decision import RegenerationPolicy, TuningAccounts
-from repro.core.persistence import TunedRegistry
-from repro.core.tuning_space import Point
+from repro.core.explorer import SearchStrategy
+from repro.core.persistence import TunedRegistry, device_fingerprint
+from repro.runtime.lifecycle import (
+    TunerLifecycle,
+    TunerState,
+    release_evaluator_closure,
+)
 
-
-def device_fingerprint() -> str:
-    """Stable identity of the accelerator the process is tuning for.
-
-    Tuned points are only transferable between identical devices, so the
-    registry key includes this fingerprint.
-    """
-    try:
-        import jax
-
-        d = jax.devices()[0]
-        return f"{d.platform}:{d.device_kind}"
-    except Exception:
-        return "unknown"
+__all__ = [
+    "ManagedTuner",
+    "TuningCoordinator",
+    "device_fingerprint",   # re-export: pre-refactor import site
+]
 
 
 def _canon_spec(spec: dict[str, Any]) -> str:
     return json.dumps(spec, sort_keys=True, separators=(",", ":"))
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(eq=False)   # identity semantics: hashable handle
 class ManagedTuner:
     """One kernel/step-program under coordinator management."""
 
@@ -72,9 +74,13 @@ class ManagedTuner:
     specialization: dict[str, Any]
     tuner: OnlineAutotuner
     warm_started: bool
+    clock: Callable[[], float] = time.perf_counter
+    state: TunerState = TunerState.ACTIVE
+    last_used_s: float = 0.0
     calls_at_last_wake: int = 0
 
     def __call__(self, *args: Any) -> Any:
+        self.last_used_s = self.clock()
         return self.tuner(*args)
 
     @property
@@ -84,6 +90,7 @@ class ManagedTuner:
     def stats(self) -> dict[str, Any]:
         out = self.tuner.stats()
         out["warm_started"] = self.warm_started
+        out["state"] = self.state.value
         return out
 
 
@@ -104,6 +111,8 @@ class TuningCoordinator:
         device: str | None = None,
         clock: Callable[[], float] | None = None,
         pump_every: int = 8,
+        lifecycle: TunerLifecycle | None = None,
+        strategy: str = "two_phase",
     ) -> None:
         self.policy = policy or RegenerationPolicy()
         self.clock = clock or time.perf_counter
@@ -117,8 +126,28 @@ class TuningCoordinator:
         self.device = device or device_fingerprint()
         self.app_start_s = self.clock()
         self.pump_every = max(int(pump_every), 1)
+        # Default lifecycle: no bucketing, no eviction (training jobs have
+        # a handful of fixed-shape step-programs); serving passes an
+        # active TunerLifecycle. Convergence handling is always on.
+        self.lifecycle = lifecycle or TunerLifecycle(
+            seq_buckets=False, idle_evict_s=None)
+        # Names only: the coordinator builds ONE strategy instance per
+        # registered tuner (over that tuner's space, seeded from the
+        # registry). A shared pre-built instance would leak one kernel's
+        # points/seen-set into another and silently drop warm starts.
+        if not isinstance(strategy, str):
+            raise TypeError(
+                "TuningCoordinator strategy must be a registry name "
+                f"(one of the repro.core.explorer strategies), got "
+                f"{type(strategy).__name__}; pass pre-built instances via "
+                "OnlineAutotuner(explorer=...) outside the coordinator")
+        self.strategy = strategy
         self._managed: list[ManagedTuner] = []
         self._by_key: dict[tuple[str, str], ManagedTuner] = {}
+        # Accounting tombstone for retired tuners: the shared budget must
+        # keep counting what they spent/gained after they unregister.
+        self._retired_accounts = TuningAccounts()
+        self._n_retired = 0
         self._lock = threading.Lock()
         self._thread: threading.Thread | None = None
         self._stop = threading.Event()
@@ -134,18 +163,23 @@ class TuningCoordinator:
         specialization: dict[str, Any] | None = None,
         reference_fn: Callable[..., Any] | None = None,
         reference_score_s: float | None = None,
+        strategy: str | None = None,
     ) -> ManagedTuner:
-        spec = dict(specialization or {})
+        if strategy is not None and not isinstance(strategy, str):
+            raise TypeError(
+                "register() strategy must be a registry name; a pre-built "
+                "instance cannot be re-seeded from the warm-start registry")
+        # Shape-like specialization keys are bucketed BEFORE keying, so
+        # e.g. seq 120 and seq 150 resolve to one shared 128-bucket tuner.
+        spec = self.lifecycle.bucket_specialization(dict(specialization or {}))
         key = (name, _canon_spec(spec))
         with self._lock:
             existing = self._by_key.get(key)
             if existing is not None:
+                existing.last_used_s = self.clock()
                 return existing
-            warm_point = self.registry.get(name, spec, self.device)
-            if warm_point is None and ":" in self.device:
-                # pre-coordinator registries keyed by bare device_kind
-                warm_point = self.registry.get(
-                    name, spec, self.device.split(":", 1)[1])
+            # exact fingerprint (incl. compiler version), then legacy keys
+            warm_point = self.registry.get_warm(name, spec, self.device)
             if warm_point is not None and not compilette.space.contains(
                     warm_point):
                 # stale entry from an older space definition (renamed or
@@ -161,6 +195,7 @@ class TuningCoordinator:
                 base_point=warm_point,
                 seed_points=[warm_point] if warm_point else (),
                 wake_every=None,           # managed: coordinator schedules
+                strategy=strategy if strategy is not None else self.strategy,
                 clock=self.clock,
                 budget_gate=self._shared_budget_gate,
             )
@@ -169,35 +204,51 @@ class TuningCoordinator:
                 specialization=spec,
                 tuner=tuner,
                 warm_started=warm_point is not None,
+                clock=self.clock,
+                last_used_s=self.clock(),
             )
             self._managed.append(managed)
             self._by_key[key] = managed
             return managed
 
     # ------------------------------------------------------- shared budget
+    # TuningAccounts fields summed across tuners by the shared budget
+    # (observed_call_s is deliberately NOT additive: it is a per-kernel
+    # latency — see _shared_budget_gate — and only max'd for reporting).
+    _ADDITIVE_FIELDS = (
+        "tuning_spent_s", "gained_s", "busy_s", "kernel_calls",
+        "regenerations", "swaps", "init_spent_s",
+    )
+
+    @classmethod
+    def _accumulate(cls, dst: TuningAccounts, src: TuningAccounts) -> None:
+        for f in cls._ADDITIVE_FIELDS:
+            setattr(dst, f, getattr(dst, f) + getattr(src, f))
+        dst.observed_call_s = max(dst.observed_call_s, src.observed_call_s)
+
     def _aggregate_accounts(self) -> TuningAccounts:
         agg = TuningAccounts(app_start_s=self.app_start_s)
+        self._accumulate(agg, self._retired_accounts)
         for m in self._managed:
-            t = m.tuner
-            t._update_gains()
-            agg.tuning_spent_s += t.accounts.tuning_spent_s
-            agg.gained_s += t.accounts.gained_s
-            agg.kernel_calls += t.accounts.kernel_calls
-            agg.regenerations += t.accounts.regenerations
-            agg.swaps += t.accounts.swaps
-            agg.init_spent_s += t.accounts.init_spent_s
+            m.tuner._update_gains()
+            self._accumulate(agg, m.tuner.accounts)
         return agg
 
     def _shared_budget_gate(
-        self, _caller: TuningAccounts, now_s: float, estimate_s: float
+        self, caller: TuningAccounts, now_s: float, estimate_s: float
     ) -> bool:
-        """Regeneration gate applied to the PROCESS totals, not the caller.
+        """Budget gate on the PROCESS totals; headroom gate on the CALLER.
 
         Every managed autotuner defers here, so the overhead cap bounds
         the sum of all tuning time while gains found by one kernel can
-        fund exploration of another.
+        fund exploration of another. The latency-headroom gate is the
+        exception: SLO headroom is a per-kernel property, so it reads the
+        calling tuner's own observed per-call time — a slow prefill must
+        not veto tuning of a fast decode step (nor vice versa).
         """
-        return self.policy.should_regenerate(
+        if not self.policy.headroom_allows(caller, estimate_s):
+            return False
+        return self.policy.budget_allows(
             self._aggregate_accounts(), now_s, estimate_s
         )
 
@@ -205,7 +256,7 @@ class TuningCoordinator:
     def _priority(self, m: ManagedTuner) -> float:
         """Estimated return of granting this kernel the next slot."""
         t = m.tuner
-        if t.explorer.finished:
+        if m.state is not TunerState.ACTIVE or t.explorer.finished:
             return float("-inf")
         if t.accounts.regenerations == 0:
             # Nothing measured yet: exploration has unbounded information
@@ -220,41 +271,91 @@ class TuningCoordinator:
             1.0 + t.accounts.regenerations
         )
 
-    def _pick(self) -> ManagedTuner | None:
-        best: ManagedTuner | None = None
-        best_pri = float("-inf")
-        for m in self._managed:   # registration order breaks ties
-            pri = self._priority(m)
-            if pri > best_pri:
-                best, best_pri = m, pri
-        if best_pri == float("-inf"):
-            return None
-        return best
+    def _candidates(self) -> list[ManagedTuner]:
+        """Wakeable tuners, best priority first (registration order ties).
+
+        ``sorted`` is stable, so equal priorities (e.g. several +inf
+        bootstrap kernels) keep registration order.
+        """
+        prioritized = [(self._priority(m), m) for m in self._managed]
+        eligible = [(p, i, m) for i, (p, m) in enumerate(prioritized)
+                    if p > float("-inf")]
+        eligible.sort(key=lambda t: (-t[0], t[1]))
+        return [m for _, _, m in eligible]
 
     def pump(self) -> bool:
-        """One scheduling slot: pick the best kernel and wake it.
+        """One scheduling slot: wake the best kernel that can use it.
 
-        Returns True when the wake swapped in a faster variant.
+        Returns True when the wake swapped in a faster variant. A kernel
+        frozen by its own latency-headroom gate passes the slot to the
+        next candidate (an over-SLO prefill must not starve a fast decode
+        step forever); a shared-budget denial instead ends the slot, so
+        accruing budget stays earmarked for the most valuable kernel
+        rather than leaking to cheaper, lower-value ones.
         """
+        self.sweep()
         with self._lock:
-            m = self._pick()
-        if m is None:
-            return False
-        regens_before = m.tuner.accounts.regenerations
-        swapped = m.tuner.wake()
-        if m.tuner.accounts.regenerations == regens_before:
-            # budget-denied (or space exhausted): the slot did nothing, so
-            # leave the kernel's hotness signal intact — resetting it here
-            # would starve exactly the kernel we judged most valuable.
-            return False
-        m.calls_at_last_wake = m.tuner.accounts.kernel_calls
+            candidates = self._candidates()
+        for m in candidates:
+            regens_before = m.tuner.accounts.regenerations
+            swapped = m.tuner.wake()
+            if m.tuner.accounts.regenerations == regens_before:
+                # the slot did nothing here: leave this kernel's hotness
+                # signal intact — resetting it would starve exactly the
+                # kernel we judged most valuable
+                est = m.tuner._cost_ema or 0.0
+                if self.policy.headroom_allows(m.tuner.accounts, est):
+                    return False   # shared-budget denial: slot ends
+                continue           # per-kernel headroom freeze: next
+            m.calls_at_last_wake = m.tuner.accounts.kernel_calls
+            self._flush_best(m)
+            return swapped
+        return False
+
+    # ----------------------------------------------------------- lifecycle
+    def _flush_best(self, m: ManagedTuner) -> None:
         best = m.tuner.explorer.best_point
         if best is not None:
             self.registry.put(
                 m.name, m.specialization, self.device,
                 best, m.tuner.explorer.best_score,
+                strategy=m.tuner.explorer.name,
             )
-        return swapped
+
+    def _fold_into_tombstone(self, m: ManagedTuner) -> None:
+        m.tuner._update_gains()
+        self._accumulate(self._retired_accounts, m.tuner.accounts)
+
+    def sweep(self) -> list[ManagedTuner]:
+        """One lifecycle pass: converge exhausted tuners, evict idle ones.
+
+        Returns the tuners retired by this pass. Called from every
+        ``pump`` and at request end (``serve_loop.generate``); cheap —
+        O(n_managed) attribute checks.
+        """
+        now = self.clock()
+        retired: list[ManagedTuner] = []
+        with self._lock:
+            for m in list(self._managed):
+                if (m.state is TunerState.ACTIVE
+                        and m.tuner.explorer.finished):
+                    m.state = TunerState.CONVERGED
+                    self._flush_best(m)
+                if m.state is TunerState.CONVERGED:
+                    # idempotent: serve code may have re-pinned the
+                    # evaluator closure on re-register; drop it again
+                    release_evaluator_closure(m.tuner)
+                if self.lifecycle.should_evict(m.last_used_s, now):
+                    m.state = TunerState.RETIRED
+                    self._flush_best(m)
+                    release_evaluator_closure(m.tuner)
+                    self._fold_into_tombstone(m)
+                    self._managed.remove(m)
+                    self._by_key.pop(
+                        (m.name, _canon_spec(m.specialization)), None)
+                    self._n_retired += 1
+                    retired.append(m)
+        return retired
 
     def maybe_pump(self) -> bool:
         """Cooperative pacing: call once per application step/iteration."""
@@ -267,6 +368,12 @@ class TuningCoordinator:
 
     @property
     def finished(self) -> bool:
+        """Every CURRENTLY managed tuner has exhausted its space.
+
+        Not a terminal state: serve traffic can register new tuners (or
+        re-register evicted ones) at any time, which is why the
+        coordinator thread keeps pumping regardless.
+        """
         return all(m.tuner.explorer.finished for m in self._managed)
 
     # ------------------------------------------------------------ threaded
@@ -276,10 +383,13 @@ class TuningCoordinator:
             return
 
         def _loop() -> None:
+            # Runs until stop_thread(): unlike a single autotuner's space,
+            # the coordinator's tuner set grows back — serve traffic
+            # re-registers after eviction, so "all finished" (or empty
+            # after a lull) is not a terminal state. Idle pumps are cheap
+            # (one lifecycle sweep + a no-op pick).
             while not self._stop.is_set():
                 self.pump()
-                if self.finished:
-                    break
                 self._stop.wait(wake_period_s)
 
         self._thread = threading.Thread(
@@ -300,14 +410,10 @@ class TuningCoordinator:
         path = path or self.registry_path
         if path is None:
             return
-        # flush current bests before writing
+        # flush current bests before writing (retired tuners were flushed
+        # at retirement)
         for m in self._managed:
-            best = m.tuner.explorer.best_point
-            if best is not None:
-                self.registry.put(
-                    m.name, m.specialization, self.device,
-                    best, m.tuner.explorer.best_score,
-                )
+            self._flush_best(m)
         self.registry.save(path)
 
     def close(self) -> None:
@@ -324,11 +430,21 @@ class TuningCoordinator:
             "regenerations": agg.regenerations,
             "swaps": agg.swaps,
             "tuning_spent_s": agg.tuning_spent_s,
+            "init_spent_s": agg.init_spent_s,
+            "busy_s": agg.busy_s,
             "gained_s": agg.gained_s,
             "overhead_frac": (
                 agg.tuning_spent_s / elapsed if elapsed > 0 else 0.0
             ),
             "budget_s": self.policy.budget_s(agg, self.clock()),
+            "budget_spent_s": self.policy.spent_s(agg),
+            "lifecycle": {
+                "active": sum(1 for m in self._managed
+                              if m.state is TunerState.ACTIVE),
+                "converged": sum(1 for m in self._managed
+                                 if m.state is TunerState.CONVERGED),
+                "retired": self._n_retired,
+            },
             "kernels": self._kernel_stats(),
         }
 

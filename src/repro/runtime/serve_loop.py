@@ -3,10 +3,23 @@
 Online auto-tuning (paper technique, serving workload): the prefill and
 decode step-programs are tunable compilettes — attention chunking for
 prefill, flash-decoding KV-chunk for decode — managed by the process-wide
-:class:`TuningCoordinator` under a strict serving overhead cap. Pass a
-long-lived coordinator (one per serving process) so tuning state, budget
-and warm-started best points persist across requests; within a single
-``generate`` call tuning already begins between decode steps.
+:class:`TuningCoordinator` under a serving-grade regime:
+
+  * the regeneration budget accrues from **busy time** (kernel-call time
+    actually observed), not lifetime wall-clock, so a long-idle server
+    cannot burst accrued budget onto one request; the register()-time
+    reference measurement is charged to the same budget;
+  * sequence lengths are **bucketed to powers of two** (nearest in log
+    space), so varied prompt shapes share tuners instead of accumulating
+    one tuner (plus pinned evaluation closures) per exact shape;
+  * exhausted tuners converge (closures released) and idle tuners are
+    evicted by the coordinator's :class:`TunerLifecycle`;
+  * the search strategy is pluggable (``ServeConfig.strategy``: any name
+    registered in :mod:`repro.core.explorer`).
+
+Pass a long-lived coordinator (one per serving process) so tuning state,
+budget and warm-started best points persist across requests; within a
+single ``generate`` call tuning already begins between decode steps.
 """
 
 from __future__ import annotations
@@ -19,9 +32,18 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.core import Compilette, Evaluator, Param, RegenerationPolicy, product_space
+from repro.core import (
+    Compilette,
+    Evaluator,
+    LatencyHeadroomGate,
+    Param,
+    RegenerationPolicy,
+    clamped_options,
+    product_space,
+)
 from repro.models.model import build_model
 from repro.runtime.coordinator import TuningCoordinator
+from repro.runtime.lifecycle import TunerLifecycle
 
 
 @dataclasses.dataclass
@@ -32,25 +54,25 @@ class ServeConfig:
     seed: int = 0
     # --- online auto-tuning (off by default: zero-overhead serving) ------
     autotune: bool = False
-    tune_max_overhead: float = 0.05   # strict serving cap: ≤5 % of wall
+    tune_max_overhead: float = 0.05   # strict serving cap: ≤5 % of BUSY time
     tune_invest: float = 0.10
+    tune_strategy: str = "two_phase"  # any repro.core.explorer registry name
+    tune_slo_s: float | None = None   # per-step latency SLO (headroom gate)
+    seq_buckets: bool = True          # pow2-bucket seq/max_len tuner keys
+    idle_evict_s: float | None = 300.0  # retire tuners idle this long
     registry_path: str | None = None  # warm-start across server restarts
     pump_every: int = 4               # decode steps between tuning slots
 
 
-def _clamped(options: tuple[int, ...], bound: int) -> tuple[int, ...]:
-    """Deduplicate chunk options past ``bound``: values larger than the
-    sequence all compile to the same program, and re-measuring duplicates
-    would waste the shared regeneration budget."""
-    return tuple(sorted({min(v, bound) for v in options}))
-
-
 def _prefill_compilette(model_cfg: ModelConfig, seq: int) -> Compilette:
-    """Points are prefill step-programs: attention chunking variants."""
+    """Points are prefill step-programs: attention chunking variants.
+
+    ``seq`` is the (bucketed) sequence extent bounding the chunk options.
+    """
     space = product_space([
-        Param("attn_q_chunk", _clamped((32, 64, 128, 256), seq),
+        Param("attn_q_chunk", clamped_options((32, 64, 128, 256), seq),
               phase=1, switch_rank=0),
-        Param("attn_k_chunk", _clamped((32, 64, 128, 256), seq),
+        Param("attn_k_chunk", clamped_options((32, 64, 128, 256), seq),
               phase=1, switch_rank=1),
     ])
 
@@ -69,7 +91,8 @@ def _decode_compilette(model_cfg: ModelConfig, max_len: int) -> Compilette:
     """Points are decode step-programs: flash-decoding KV-chunk variants."""
     space = product_space([
         Param("decode_k_chunk",
-              _clamped((128, 256, 512, 1024, 4096), max_len), phase=1),
+              clamped_options((128, 256, 512, 1024, 4096), max_len),
+              phase=1),
     ])
 
     def gen(point, **spec):
@@ -88,9 +111,20 @@ def make_serve_coordinator(
         policy=RegenerationPolicy(
             max_overhead_frac=serve.tune_max_overhead,
             invest_frac=serve.tune_invest,
+            # serving-grade budget: accrue from kernel busy time (idle
+            # periods earn nothing) and charge reference measurements
+            budget_from="busy",
+            charge_init=True,
+            headroom=(LatencyHeadroomGate(slo_s=serve.tune_slo_s)
+                      if serve.tune_slo_s else None),
         ),
         registry_path=serve.registry_path,
         pump_every=serve.pump_every,
+        lifecycle=TunerLifecycle(
+            seq_buckets=serve.seq_buckets,
+            idle_evict_s=serve.idle_evict_s,
+        ),
+        strategy=serve.tune_strategy,
         clock=clock,
     )
 
@@ -125,11 +159,17 @@ def generate(
         t_init = time.perf_counter()
         if coordinator is None:
             coordinator = make_serve_coordinator(serve)
+        # The compilette's chunk options are bounded by the BUCKETED
+        # extent, matching the bucketed specialization key the
+        # coordinator registers under — so seq 120 and 150 build the
+        # identical 128-bucket space and share one tuner.
+        seq_b = coordinator.lifecycle.bucket_length(T)
         prefill_ev = Evaluator(
             mode="real", real_runs=1, warmup=1,
             make_args=lambda: (params, batch))
         prefill = coordinator.register(
-            "serve_prefill", _prefill_compilette(model_cfg, T), prefill_ev,
+            "serve_prefill", _prefill_compilette(model_cfg, seq_b),
+            prefill_ev,
             specialization={"seq": T, "batch": B},
             reference_fn=prefill,
         )
@@ -162,12 +202,14 @@ def generate(
         # outputs are discarded, so measurement is side-effect-free.
         t_init = time.perf_counter()
         decode_state.update(cache=cache, tokens=tokens, pos=jnp.int32(pos0))
+        max_len_b = coordinator.lifecycle.bucket_length(max_len)
         decode_ev = Evaluator(
             mode="real", real_runs=1, warmup=1,
             make_args=lambda: (params, decode_state["cache"],
                                decode_state["tokens"], decode_state["pos"]))
         decode = coordinator.register(
-            "serve_decode", _decode_compilette(model_cfg, max_len), decode_ev,
+            "serve_decode", _decode_compilette(model_cfg, max_len_b),
+            decode_ev,
             specialization={"max_len": max_len, "batch": B},
             reference_fn=decode,
         )
@@ -196,13 +238,10 @@ def generate(
     }
     if serve.autotune:
         coordinator.save_registry()
-        # Evaluator closures pin this request's params/batch/cache so
-        # between-request pumps can still measure variants; once a tuner
-        # has exhausted its space nothing will evaluate again — release
-        # the arrays instead of holding them for the coordinator's life.
-        for managed in (prefill, decode):
-            if managed.tuner.explorer.finished:
-                managed.tuner.evaluator.make_args = None
+        # Lifecycle pass at request end: converged tuners release the
+        # evaluator closures pinning this request's params/batch/cache,
+        # and tuners idle past the eviction horizon are unregistered.
+        coordinator.sweep()
         out["tune_init_s"] = tune_init_s
         out["autotune"] = coordinator.stats()
     return out

@@ -35,7 +35,8 @@ import jax.numpy as jnp
 from repro.checkpoint.checkpointer import Checkpointer
 from repro.configs.base import ModelConfig, ShapeSpec
 from repro.core import (
-    Compilette, Evaluator, Param, RegenerationPolicy, product_space,
+    Compilette, Evaluator, Param, RegenerationPolicy, clamped_options,
+    product_space,
 )
 from repro.data.pipeline import batches_for, device_put_batch
 from repro.distributed.compression import ErrorFeedback
@@ -55,6 +56,7 @@ class TrainLoopConfig:
     autotune: bool = False
     tune_max_overhead: float = 0.20     # generous for short demo runs
     tune_invest: float = 0.5
+    tune_strategy: str = "two_phase"    # repro.core.explorer registry name
     compress_grads: bool = False
     straggler_factor: float = 3.0
     fail_at_step: int | None = None     # fault injection (tests)
@@ -76,18 +78,26 @@ def _make_step(model, optimizer, ef: ErrorFeedback | None, cfg: ModelConfig):
 
 
 def _attention_step_compilette(model_cfg: ModelConfig, model, optimizer,
-                               ef, sample_batch) -> Compilette:
-    """Compilette whose points are attention-chunk program variants."""
+                               ef, sample_batch, seq: int) -> Compilette:
+    """Compilette whose points are attention-chunk program variants.
+
+    Chunk options are bounded by the training sequence length up front
+    (same dedup as the serve compilettes): chunks past ``seq`` all
+    compile to the same program, so enumerating them would waste the
+    shared regeneration budget.
+    """
     space = product_space([
-        Param("attn_q_chunk", (64, 128, 256), phase=1, switch_rank=0),
-        Param("attn_k_chunk", (64, 128, 256, 512), phase=1, switch_rank=1),
+        Param("attn_q_chunk", clamped_options((64, 128, 256), seq),
+              phase=1, switch_rank=0),
+        Param("attn_k_chunk", clamped_options((64, 128, 256, 512), seq),
+              phase=1, switch_rank=1),
     ])
 
     def generate(point, **spec):
         cfg2 = dataclasses.replace(
             model_cfg,
-            attn_q_chunk=min(point["attn_q_chunk"], spec.get("seq", 1 << 30)),
-            attn_k_chunk=min(point["attn_k_chunk"], spec.get("seq", 1 << 30)),
+            attn_q_chunk=point["attn_q_chunk"],
+            attn_k_chunk=point["attn_k_chunk"],
         )
         model2 = build_model(cfg2)
         raw = _make_step(model2, optimizer, ef, cfg2)
@@ -135,7 +145,7 @@ def train(
     tuner = None
     if loop.autotune:
         comp = _attention_step_compilette(
-            model_cfg, model, optimizer, ef, first_batch)
+            model_cfg, model, optimizer, ef, first_batch, shape.seq_len)
         spec = {"seq": shape.seq_len}
         evaluator = Evaluator(
             mode="real", real_runs=2, warmup=1,
@@ -148,6 +158,7 @@ def train(
                                       loop.tune_invest),
             registry_path=registry_path,
             pump_every=2,
+            strategy=loop.tune_strategy,
         )
         tuner = coordinator.register(
             "train_step_attn", comp, evaluator,
