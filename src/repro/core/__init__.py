@@ -4,7 +4,13 @@ Public API re-exports.
 """
 
 from repro.core.autotuner import OnlineAutotuner
-from repro.core.compilette import Compilette, GeneratedKernel
+from repro.core.compilette import (
+    AsyncGenerator,
+    Compilette,
+    GeneratedKernel,
+    GenerationCache,
+    GenerationTicket,
+)
 from repro.core.decision import (
     LatencyHeadroomGate,
     RegenerationPolicy,
@@ -18,6 +24,7 @@ from repro.core.evaluator import (
     VirtualClockEvaluator,
     filtered_training_time,
     mean_real_time,
+    virtual_compilette,
     virtual_kernel,
 )
 from repro.core.explorer import (
@@ -47,8 +54,11 @@ from repro.core.tuning_space import (
 
 __all__ = [
     "OnlineAutotuner",
+    "AsyncGenerator",
     "Compilette",
     "GeneratedKernel",
+    "GenerationCache",
+    "GenerationTicket",
     "LatencyHeadroomGate",
     "RegenerationPolicy",
     "TuningAccounts",
@@ -59,6 +69,7 @@ __all__ = [
     "VirtualClockEvaluator",
     "filtered_training_time",
     "mean_real_time",
+    "virtual_compilette",
     "virtual_kernel",
     "SearchStrategy",
     "TwoPhaseExplorer",

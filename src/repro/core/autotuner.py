@@ -35,7 +35,12 @@ import threading
 import time
 from typing import Any, Callable, Sequence
 
-from repro.core.compilette import Compilette, GeneratedKernel
+from repro.core.compilette import (
+    AsyncGenerator,
+    Compilette,
+    GeneratedKernel,
+    GenerationTicket,
+)
 from repro.core.decision import RegenerationPolicy, TuningAccounts
 from repro.core.evaluator import Measurement
 from repro.core.explorer import SearchStrategy, make_strategy
@@ -72,6 +77,7 @@ class OnlineAutotuner:
         explorer: SearchStrategy | None = None,
         clock: Callable[[], float] | None = None,
         budget_gate: BudgetGate | None = None,
+        generator: AsyncGenerator | None = None,
     ) -> None:
         self.compilette = compilette
         self.evaluator = evaluator
@@ -79,6 +85,14 @@ class OnlineAutotuner:
         self.specialization = dict(specialization or {})
         self._clock = clock or time.perf_counter
         self._budget_gate = budget_gate
+        # Double-buffered generation: when an AsyncGenerator is injected
+        # (by the coordinator), wake() REQUESTS the next variant and keeps
+        # the current active_fn serving until the compile is ready.
+        self._generator = generator
+        self._pending: GenerationTicket | None = None
+        # EWMA of real per-call latency (fed by ManagedTuner.__call__ via
+        # observe_latency); None until the first observation.
+        self._latency_ewma: float | None = None
         # `explorer` (a pre-built instance) wins over `strategy` (a registry
         # name or instance); both default to the paper's two-phase order.
         self.explorer = explorer or make_strategy(
@@ -158,12 +172,59 @@ class OnlineAutotuner:
             busy += life.calls * life.score_s
         self.accounts.gained_s = gained
         self.accounts.busy_s = busy
-        self.accounts.observed_call_s = self._active_life.score_s
+        # Headroom gating prefers the EWMA of real observed call latencies
+        # (one outlier call can no longer freeze/unfreeze tuning); the
+        # measured score is the fallback for unmanaged tuners.
+        self.accounts.observed_call_s = (
+            self._latency_ewma if self._latency_ewma is not None
+            else self._active_life.score_s)
+
+    def observe_latency(self, call_s: float, alpha: float = 0.2) -> None:
+        """Feed one real per-call latency into the EWMA estimate."""
+        if call_s < 0:
+            return
+        if self._latency_ewma is None:
+            self._latency_ewma = float(call_s)
+        else:
+            self._latency_ewma += alpha * (float(call_s) - self._latency_ewma)
+        # write through: the headroom gate must see fresh telemetry even
+        # between _update_gains passes
+        self.accounts.observed_call_s = self._latency_ewma
 
     # ------------------------------------------------------------ wake-up
+    @property
+    def generation_in_flight(self) -> bool:
+        """A requested variant is still compiling in the background."""
+        return self._pending is not None and not self._pending.done
+
     def wake(self) -> bool:
-        """One wake-up of the tuning thread. Returns True if it swapped."""
+        """One wake-up of the tuning thread. Returns True if it swapped.
+
+        Without an :class:`AsyncGenerator` this is the paper's synchronous
+        cycle: generate, evaluate, maybe swap — the compile stalls the
+        wake. With one (coordinator-injected), a wake instead *requests*
+        the next variant and returns immediately; the active function
+        keeps serving until a later wake finds the compiled candidate
+        ready and only then pays the (much cheaper) evaluation. The full
+        generation time is charged to the budget either way — only the
+        *stall* disappears.
+        """
         with self._lock:
+            # -- harvest: a previously requested variant may be ready ----
+            if self._pending is not None:
+                ticket = self._generator.poll(self._pending)
+                if ticket is None:
+                    return False   # still compiling; hot path unstalled
+                self._pending = None
+                if ticket.error is not None:
+                    # late-found hole: charge the wasted compile, move on
+                    self.accounts.tuning_spent_s += ticket.gen_charge_s
+                    self.accounts.gen_spent_s += ticket.gen_charge_s
+                    self.explorer.report(ticket.point, float("inf"))
+                    return False
+                return self._measure_and_swap(
+                    ticket.point, ticket.kern,
+                    gen_charge_s=ticket.gen_charge_s, stalled=ticket.stalled)
             if self.explorer.finished:
                 return False
             self._update_gains()
@@ -175,40 +236,134 @@ class OnlineAutotuner:
             point = self.explorer.next_point()
             if point is None:
                 return False
+            # -- request: pipelined generation (double buffering) --------
+            if self._generator is not None:
+                ticket = self._generator.submit(
+                    self.compilette, point, self.specialization)
+                self.accounts.gen_requests += 1
+                if not ticket.done:
+                    self._pending = ticket
+                    return False
+                if ticket.error is not None:
+                    self.explorer.report(point, float("inf"))
+                    return False
+                # cache hit: ready now at zero cost — evaluate in place
+                # (ticket.stalled covers the rare eviction race where the
+                # "hit" actually recompiled inline on this thread)
+                return self._measure_and_swap(
+                    point, ticket.kern,
+                    gen_charge_s=ticket.gen_charge_s, stalled=ticket.stalled)
+            # -- synchronous generate+evaluate (paper's original cycle) --
             t0 = self._clock()
             try:
                 kern: GeneratedKernel = self.compilette.generate(
                     point, **self.specialization
                 )
-                measurement: Measurement = self.evaluator.evaluate(kern.fn)
             except Exception:
                 # Generation failures are holes discovered late: record the
                 # spent time and move on (the paper's "could not generate
-                # code" entries).
-                self.accounts.tuning_spent_s += self._clock() - t0
+                # code" entries). The whole interval is generation (the
+                # evaluation never started), and it stalled this wake.
+                spent = self._clock() - t0
+                self.accounts.tuning_spent_s += spent
+                self.accounts.gen_spent_s += spent
+                self.accounts.gen_stall_s += spent
                 self.explorer.report(point, float("inf"))
                 return False
-            spent = self._clock() - t0
+            compiled = kern.meta.get("source", "compiled") == "compiled"
+            if (compiled and kern.meta.get("simulated")
+                    and hasattr(self._clock, "advance")):
+                # a simulated compile cost stalls the virtual clock exactly
+                # like a real synchronous XLA compile stalls the wall clock
+                self._clock.advance(kern.generation_time_s)
+            return self._measure_and_swap(
+                point, kern, gen_charge_s=kern.generation_time_s,
+                stalled=compiled, wall_t0=t0)
+
+    def _measure_and_swap(
+        self,
+        point: Point,
+        kern: GeneratedKernel,
+        *,
+        gen_charge_s: float,
+        stalled: bool,
+        wall_t0: float | None = None,
+    ) -> bool:
+        """Evaluate a generated variant, charge the accounts, maybe swap.
+
+        ``wall_t0`` set means the generation ran synchronously inside this
+        wake (the clock interval covers it); otherwise generation time was
+        overlapped (or cached) and ``gen_charge_s`` is added explicitly so
+        the budget still pays for it.
+        """
+        t_eval = self._clock()
+
+        def _charge(spent: float, eval_s: float) -> None:
             self.accounts.tuning_spent_s += spent
-            self.accounts.regenerations += 1
-            self._cost_ema = (
-                spent
-                if self._cost_ema is None
-                else 0.5 * self._cost_ema + 0.5 * spent
-            )
-            is_best = self.explorer.report(point, measurement.score_s)
-            if is_best and measurement.score_s < self._active_life.score_s:
-                self._active = kern.fn
-                self._active_life = KernelLife(
-                    point=dict(point), score_s=measurement.score_s
-                )
-                self._lives.append(self._active_life)
-                self.accounts.swaps += 1
-                return True
+            self.accounts.gen_spent_s += gen_charge_s
+            self.accounts.eval_spent_s += eval_s
+            if stalled:
+                self.accounts.gen_stall_s += gen_charge_s
+
+        try:
+            measurement: Measurement = self.evaluator.evaluate(kern.fn)
+        except Exception:
+            eval_s = self._clock() - t_eval
+            start = wall_t0 if wall_t0 is not None else t_eval
+            spent = self._clock() - start
+            if wall_t0 is None:
+                spent += gen_charge_s
+            _charge(spent, eval_s)
+            self.explorer.report(point, float("inf"))
             return False
+        eval_s = self._clock() - t_eval
+        if wall_t0 is not None:
+            spent = self._clock() - wall_t0
+        else:
+            spent = gen_charge_s + eval_s
+        _charge(spent, eval_s)
+        self.accounts.regenerations += 1
+        self._cost_ema = (
+            spent
+            if self._cost_ema is None
+            else 0.5 * self._cost_ema + 0.5 * spent
+        )
+        is_best = self.explorer.report(point, measurement.score_s)
+        if is_best and measurement.score_s < self._active_life.score_s:
+            self._active = kern.fn
+            self._active_life = KernelLife(
+                point=dict(point), score_s=measurement.score_s
+            )
+            self._lives.append(self._active_life)
+            self.accounts.swaps += 1
+            return True
+        return False
+
+    def abandon_pending(self, charge_cb=None) -> None:
+        """Drop an unharvested generation request (tuner is retiring).
+
+        The compile cost must still reach the budget: a completed ticket
+        is billed here (so the caller can fold these accounts into its
+        tombstone), an in-flight one is handed back to the generator
+        with ``charge_cb`` to bill at completion.
+        """
+        with self._lock:
+            ticket = self._pending
+            self._pending = None
+            if ticket is None or self._generator is None:
+                return
+            charge = self._generator.disown(ticket, charge_cb)
+            if charge > 0.0:
+                self.accounts.gen_spent_s += charge
+                self.accounts.tuning_spent_s += charge
 
     def exhaust(self, max_wakes: int = 100000) -> None:
-        """Drive wake-ups ignoring call pacing until budget or space ends."""
+        """Drive wake-ups ignoring call pacing until budget or space ends.
+
+        Synchronous tuners only: with an async generator, driving the
+        pipeline is the coordinator's job (``pump`` completes and harvests
+        in-flight generations).
+        """
         for _ in range(max_wakes):
             if self.explorer.finished:
                 break
@@ -249,6 +404,10 @@ class OnlineAutotuner:
             "regenerations": self.accounts.regenerations,
             "swaps": self.accounts.swaps,
             "tuning_spent_s": self.accounts.tuning_spent_s,
+            "gen_spent_s": self.accounts.gen_spent_s,
+            "gen_stall_s": self.accounts.gen_stall_s,
+            "eval_spent_s": self.accounts.eval_spent_s,
+            "generation_in_flight": self.generation_in_flight,
             "gained_s": self.accounts.gained_s,
             "overhead_frac": (
                 self.accounts.tuning_spent_s / elapsed if elapsed > 0 else 0.0

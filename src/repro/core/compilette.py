@@ -15,26 +15,131 @@ concrete compiled executable*:
 The generator function receives ``(point, **specialization)`` and must
 return a callable ``fn(*args)``. Generation cost is measured and reported —
 it is part of the paper's claimed overhead budget.
+
+Two pieces take generation cost OFF the application hot path:
+
+  * :class:`GenerationCache` — memoizes :class:`GeneratedKernel`\\ s under
+    ``(kernel, point, specialization, device fingerprint[, token])``. A
+    point revisited after bucketing, tuner eviction or a warm start is a
+    cache hit: the stored executable is returned with zero generation
+    time instead of recompiling. The cache is owned by the process-wide
+    ``TuningCoordinator`` (one per process), so entries survive tuner
+    retirement and re-registration.
+  * :class:`AsyncGenerator` — a single background compile executor (the
+    coordinator's analogue of the paper's "new version in a code buffer"
+    double-buffering): the tuning wake *requests* a variant and keeps the
+    current active function serving until the compiled candidate is
+    ready. In ``"thread"`` mode one worker thread compiles; in
+    ``"manual"`` mode jobs complete only at explicit ``run_pending()``
+    calls, which is what makes the pipeline deterministically testable
+    under a :class:`~repro.core.VirtualClock` (no sleeps).
 """
 
 from __future__ import annotations
 
+import collections
 import dataclasses
+import queue
+import threading
 import time
 from typing import Any, Callable, Mapping
 
+from repro.core.persistence import _canon
 from repro.core.tuning_space import Point, TuningSpace
 
 
 @dataclasses.dataclass
 class GeneratedKernel:
-    """A concrete variant: the paper's 'new version in a code buffer'."""
+    """A concrete variant: the paper's 'new version in a code buffer'.
+
+    ``generation_time_s`` is the cost *charged for this instantiation*: the
+    measured (or simulated) compile time on a fresh compile, and ``0.0``
+    on a :class:`GenerationCache` hit (``meta["source"] == "cache"``; the
+    original compile cost is kept in ``meta["compiled_in_s"]``).
+    """
 
     point: Point
     fn: Callable[..., Any]
     generation_time_s: float
     specialization: dict[str, Any]
     meta: dict[str, Any] = dataclasses.field(default_factory=dict)
+
+
+class GenerationCache:
+    """Process-wide memo of compiled variants, keyed by full identity.
+
+    The key is ``(kernel name, cache token, canonical point, canonical
+    specialization, device fingerprint)`` — the same identity the
+    ``TunedRegistry`` persists best points under, so anything the registry
+    would warm-start, the cache can serve without recompiling. Entries are
+    kept in LRU order; ``max_entries`` bounds residency (compiled XLA
+    executables pin device memory), ``None`` means unbounded.
+
+    Thread-safe: the coordinator's tuning thread, the async compile
+    worker, and the application thread may all hit it concurrently.
+    """
+
+    def __init__(self, max_entries: int | None = None) -> None:
+        self._table: "collections.OrderedDict[tuple, GeneratedKernel]" = (
+            collections.OrderedDict())
+        self._mu = threading.Lock()
+        self.max_entries = max_entries
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    @staticmethod
+    def key(
+        kernel: str,
+        point: Point,
+        specialization: Mapping[str, Any],
+        device: str,
+        token: str | None = None,
+    ) -> tuple:
+        return (kernel, token, _canon(dict(point)),
+                _canon(dict(specialization)), device)
+
+    def get(self, key: tuple) -> GeneratedKernel | None:
+        with self._mu:
+            kern = self._table.get(key)
+            if kern is None:
+                self.misses += 1
+                return None
+            self._table.move_to_end(key)
+            self.hits += 1
+            return kern
+
+    def put(self, key: tuple, kern: GeneratedKernel) -> None:
+        with self._mu:
+            self._table[key] = kern
+            self._table.move_to_end(key)
+            while (self.max_entries is not None
+                   and len(self._table) > self.max_entries):
+                self._table.popitem(last=False)
+                self.evictions += 1
+
+    def __len__(self) -> int:
+        with self._mu:
+            return len(self._table)
+
+    def __contains__(self, key: tuple) -> bool:
+        with self._mu:
+            return key in self._table
+
+    def clear(self) -> None:
+        with self._mu:
+            self._table.clear()
+
+    def stats(self) -> dict[str, Any]:
+        with self._mu:
+            total = self.hits + self.misses
+            return {
+                "entries": len(self._table),
+                "hits": self.hits,
+                "misses": self.misses,
+                "evictions": self.evictions,
+                "hit_rate": self.hits / total if total else 0.0,
+            }
 
 
 class Compilette:
@@ -49,10 +154,17 @@ class Compilette:
                 should *close over* the specialized run-time constants —
                 this is the deGoal ``#(...)`` inlining analogue (in JAX,
                 trace-time constant folding).
-    warmup:     if given, ``warmup(fn, *args)`` is called once after
-                generation so that measured times exclude one-time compile
-                cost when the evaluator asks for steady-state timing (the
-                XLA compile itself is accounted as generation time).
+    gen_cost_s: simulated generation cost — a float or
+                ``f(point, specialization) -> seconds``. When set, the
+                reported ``generation_time_s`` is this simulated cost
+                instead of the measured wall time (``meta["simulated"]``
+                is True), which is how virtual-clock tests model compile
+                cost deterministically.
+    cache_token: extra identity mixed into the generation-cache key.
+                Compilettes that share a *name* but generate different
+                programs (e.g. the serve step-programs of two different
+                model configs) must carry distinct tokens, or a cache hit
+                would hand one kernel the other's executable.
     """
 
     def __init__(
@@ -61,31 +173,391 @@ class Compilette:
         space: TuningSpace,
         generate: Callable[..., Callable[..., Any]],
         cost_model: Callable[[Point, Mapping[str, Any], Any], float] | None = None,
+        *,
+        gen_cost_s: float | Callable[..., float] | None = None,
+        cache_token: str | None = None,
     ) -> None:
         self.name = name
         self.space = space
         self._generate = generate
         # cost_model(point, specialization, profile) -> simulated seconds.
         self.cost_model = cost_model
+        self.gen_cost_s = gen_cost_s
+        self.cache_token = cache_token
+        # Attached by the coordinator (attach_cache): process-wide memo of
+        # compiled variants + the device fingerprint that keys it.
+        self.cache: GenerationCache | None = None
+        self.cache_device: str = "uncached"
+
+    # ------------------------------------------------------------- caching
+    def attach_cache(self, cache: GenerationCache | None,
+                     device: str | None = None) -> None:
+        """Route this compilette's generations through ``cache``."""
+        self.cache = cache
+        if device is not None:
+            self.cache_device = device
+
+    def cache_key(self, point: Point,
+                  specialization: Mapping[str, Any]) -> tuple:
+        return GenerationCache.key(
+            self.name, point, specialization, self.cache_device,
+            self.cache_token)
+
+    def _simulated_cost(self, point: Point,
+                        specialization: Mapping[str, Any]) -> float | None:
+        if self.gen_cost_s is None:
+            return None
+        if callable(self.gen_cost_s):
+            return float(self.gen_cost_s(dict(point), dict(specialization)))
+        return float(self.gen_cost_s)
 
     def generate(self, point: Point, **specialization: Any) -> GeneratedKernel:
+        """Instantiate ``point`` — from the cache when possible.
+
+        A cache hit returns a fresh :class:`GeneratedKernel` wrapper
+        (shared ``fn``, private ``meta``) with ``generation_time_s = 0``:
+        nothing was compiled, so nothing is charged and nothing stalls.
+        ``Compilette._generate`` runs at most once per cache key.
+        """
         if not self.space.is_valid(point):
             raise ValueError(
                 f"compilette {self.name!r}: point {point} is a hole in the "
                 "tuning space (invalid variant)"
             )
+        key = None
+        if self.cache is not None:
+            key = self.cache_key(point, specialization)
+            cached = self.cache.get(key)
+            if cached is not None:
+                return GeneratedKernel(
+                    point=dict(point),
+                    fn=cached.fn,
+                    generation_time_s=0.0,
+                    specialization=dict(specialization),
+                    meta={"source": "cache",
+                          "compiled_in_s": cached.meta.get(
+                              "compiled_in_s", cached.generation_time_s)},
+                )
         t0 = time.perf_counter()
         fn = self._generate(dict(point), **specialization)
         dt = time.perf_counter() - t0
-        return GeneratedKernel(
+        sim = self._simulated_cost(point, specialization)
+        kern = GeneratedKernel(
             point=dict(point),
             fn=fn,
-            generation_time_s=dt,
+            generation_time_s=dt if sim is None else sim,
             specialization=dict(specialization),
+            meta={"source": "compiled", "simulated": sim is not None,
+                  "compiled_in_s": dt if sim is None else sim},
         )
+        if self.cache is not None and key is not None:
+            self.cache.put(key, kern)
+        return kern
 
     def simulate(self, point: Point, profile: Any, **specialization: Any) -> float:
         """Simulated execution time of ``point`` on a device ``profile``."""
         if self.cost_model is None:
             raise ValueError(f"compilette {self.name!r} has no cost model")
         return self.cost_model(dict(point), dict(specialization), profile)
+
+
+# ------------------------------------------------------------- async pipeline
+@dataclasses.dataclass(eq=False)
+class GenerationTicket:
+    """Handle for one in-flight (or completed) generation job."""
+
+    compilette: Compilette
+    point: Point
+    specialization: dict[str, Any]
+    speculative: bool = False
+    # set at completion (under the generator lock):
+    done: bool = False
+    kern: GeneratedKernel | None = None
+    error: BaseException | None = None
+    gen_charge_s: float = 0.0   # unclaimed budget charge for the harvester
+    stalled: bool = False       # the generation ran inline on the caller
+                                # (cache-eviction race): a real stall
+    # charge_cb(ticket, seconds): bills a speculative compile at completion
+    _charge_cb: Callable[["GenerationTicket", float], None] | None = None
+
+    def adopt(self) -> None:
+        """A tuner claims a speculative ticket: the harvester (not the
+        completion callback) will charge its generation time."""
+        self.speculative = False
+        self._charge_cb = None
+
+
+class AsyncGenerator:
+    """Single background compile executor shared by a whole coordinator.
+
+    The paper keeps the application running the current version while the
+    next one is emitted into a second code buffer; this is that overlap
+    for XLA compiles. One executor per process mirrors the coordinator's
+    single tuning thread: compilation parallelism is bounded at 1, so
+    tuning can never oversubscribe the host the kernels run on.
+
+    Modes:
+      * ``"thread"`` — a daemon worker thread drains the job queue;
+        generation time is measured wall time in the worker (real mode).
+      * ``"manual"`` — jobs complete only when ``run_pending()`` is
+        called (the coordinator calls it at the top of every ``pump``),
+        so a job submitted at pump *k* is ready at pump *k+1*: fully
+        deterministic under a ``VirtualClock``, no sleeps anywhere.
+
+    ``submit`` deduplicates by cache key: a job already in flight is
+    joined (the same ticket is returned), and a point already in the
+    compilette's cache returns an immediately-done ticket. Speculative
+    (prefetch) submissions carry a charge callback so their compile time
+    is billed to the requesting tuner's accounts even if the prefetched
+    variant is never proposed.
+    """
+
+    def __init__(self, mode: str = "thread",
+                 worker_idle_timeout_s: float = 30.0) -> None:
+        if mode not in ("thread", "manual"):
+            raise ValueError(f"AsyncGenerator mode must be 'thread' or "
+                             f"'manual', got {mode!r}")
+        self.mode = mode
+        self.worker_idle_timeout_s = worker_idle_timeout_s
+        self._mu = threading.Lock()
+        self._inflight: dict[tuple, GenerationTicket] = {}
+        # negative memo: keys whose generation raised. Bounded by the
+        # number of holes in the managed tuning spaces; without it a
+        # prefetched hole would be compiled (and billed) a second time
+        # when the tuner itself proposes the point.
+        self._failed: dict[tuple, BaseException] = {}
+        self._queue: "queue.Queue[GenerationTicket | None]" = queue.Queue()
+        self._worker: threading.Thread | None = None
+        self.submitted = 0
+        self.completed = 0
+        self.failed = 0
+        self.speculative_submitted = 0
+        self.joined = 0
+
+    # ------------------------------------------------------------ lifecycle
+    def _ensure_worker(self) -> None:
+        if self.mode != "thread":
+            return
+        with self._mu:
+            if self._worker is not None:
+                return
+            self._worker = threading.Thread(
+                target=self._worker_loop, daemon=True,
+                name="variant-generator")
+            self._worker.start()
+
+    def _worker_loop(self) -> None:
+        # The worker retires itself after an idle period (a fresh one is
+        # spawned by the next submit), so a forgotten coordinator — e.g.
+        # a per-request one that was never close()d — does not pin a
+        # blocked daemon thread for the life of the process.
+        while True:
+            try:
+                ticket = self._queue.get(timeout=self.worker_idle_timeout_s)
+            except queue.Empty:
+                with self._mu:
+                    if self._queue.empty():
+                        self._worker = None
+                        return
+                continue
+            if ticket is None:
+                with self._mu:
+                    self._worker = None
+                return
+            self._run(ticket)
+
+    def shutdown(self) -> None:
+        with self._mu:
+            worker = self._worker
+        if worker is not None:
+            self._queue.put(None)
+            worker.join(timeout=5.0)
+
+    # ------------------------------------------------------------- running
+    def _run(self, ticket: GenerationTicket) -> None:
+        t0 = time.perf_counter()
+        try:
+            kern = ticket.compilette.generate(
+                ticket.point, **ticket.specialization)
+            err = None
+        except BaseException as e:  # generation failure = late-found hole
+            # drop the traceback: it pins the whole _generate frame
+            # (model state, tracing temporaries) for as long as the
+            # failure memo lives, and no consumer ever re-raises
+            kern, err = None, e.with_traceback(None)
+        failed_charge = time.perf_counter() - t0
+        if err is not None:
+            try:
+                # a declared simulated cost keeps failure billing
+                # deterministic under virtual clocks (successes already
+                # bill the declared cost via generation_time_s)
+                sim = ticket.compilette._simulated_cost(
+                    ticket.point, ticket.specialization)
+                if sim is not None:
+                    failed_charge = sim
+            except Exception:
+                pass
+        with self._mu:
+            ticket.kern = kern
+            ticket.error = err
+            if err is not None:
+                self._failed[ticket.compilette.cache_key(
+                    ticket.point, ticket.specialization)] = err
+            charge = (kern.generation_time_s if kern is not None
+                      else failed_charge)
+            if ticket.speculative and ticket._charge_cb is not None:
+                # prefetch: the requester is billed NOW (used or not);
+                # the harvester must not charge a second time
+                cb, ticket.gen_charge_s = ticket._charge_cb, 0.0
+            else:
+                cb, ticket.gen_charge_s = None, charge
+            ticket.done = True
+            self._inflight.pop(
+                ticket.compilette.cache_key(
+                    ticket.point, ticket.specialization), None)
+            if err is None:
+                self.completed += 1
+            else:
+                self.failed += 1
+        if cb is not None:
+            # outside the lock: the callback charges tuner/coordinator
+            # accounts and may take their locks
+            cb(ticket, charge)
+
+    def run_pending(self, max_jobs: int | None = None) -> int:
+        """Manual mode: complete queued jobs inline. No-op in thread mode
+        (the worker drains the queue itself). Returns jobs completed."""
+        if self.mode != "manual":
+            return 0
+        n = 0
+        while max_jobs is None or n < max_jobs:
+            try:
+                ticket = self._queue.get_nowait()
+            except queue.Empty:
+                return n
+            if ticket is None:
+                continue
+            self._run(ticket)
+            n += 1
+        return n
+
+    # ------------------------------------------------------------- submit
+    def submit(
+        self,
+        compilette: Compilette,
+        point: Point,
+        specialization: Mapping[str, Any],
+        *,
+        speculative: bool = False,
+        charge_cb: Callable[[GenerationTicket, float], None] | None = None,
+    ) -> GenerationTicket:
+        """Request generation of ``point``; never blocks on the compile.
+
+        Returns a ticket that is already ``done`` when the variant is in
+        the cache, the in-flight ticket when the same key was already
+        submitted (a non-speculative join adopts a speculative ticket),
+        or a freshly queued job otherwise.
+        """
+        key = compilette.cache_key(point, specialization)
+
+        def _join_locked(existing: GenerationTicket) -> GenerationTicket:
+            self.joined += 1
+            if not speculative:
+                existing.adopt()
+            return existing
+
+        with self._mu:
+            existing = self._inflight.get(key)
+            if existing is not None:
+                return _join_locked(existing)
+            failed = self._failed.get(key)
+            if failed is not None:
+                # known hole: an already-billed failure, never recompiled
+                return GenerationTicket(
+                    compilette=compilette, point=dict(point),
+                    specialization=dict(specialization), done=True,
+                    error=failed, gen_charge_s=0.0)
+        if compilette.cache is not None and key in compilette.cache:
+            # hit: materialize through generate() so cache counters and
+            # the zero-cost hit wrapper stay consistent. OUTSIDE the
+            # generator lock: in the rare race where an LRU eviction
+            # lands between the check and the get, generate() recompiles
+            # inline — a bounded stall for this caller only, charged
+            # below AND flagged as a stall, never a compile inside the
+            # critical section. A failure on that inline path is a hole
+            # like any other (a raise here would crash the caller's
+            # pump/request thread).
+            try:
+                kern = compilette.generate(point, **dict(specialization))
+            except BaseException as e:
+                err = e.with_traceback(None)
+                with self._mu:
+                    self._failed[key] = err
+                    self.failed += 1
+                return GenerationTicket(
+                    compilette=compilette, point=dict(point),
+                    specialization=dict(specialization), done=True,
+                    error=err, gen_charge_s=0.0)
+            return GenerationTicket(
+                compilette=compilette, point=dict(point),
+                specialization=dict(specialization), done=True,
+                kern=kern, gen_charge_s=kern.generation_time_s,
+                stalled=kern.meta.get("source") == "compiled")
+        with self._mu:
+            existing = self._inflight.get(key)
+            if existing is not None:   # raced in while we were unlocked
+                return _join_locked(existing)
+            ticket = GenerationTicket(
+                compilette=compilette, point=dict(point),
+                specialization=dict(specialization),
+                speculative=speculative, _charge_cb=charge_cb)
+            self._inflight[key] = ticket
+            self.submitted += 1
+            if speculative:
+                self.speculative_submitted += 1
+        # enqueue BEFORE ensuring the worker: an idle worker only retires
+        # after seeing an empty queue, so the job is picked up either by
+        # the surviving worker or by the one _ensure_worker spawns
+        self._queue.put(ticket)
+        self._ensure_worker()
+        return ticket
+
+    def poll(self, ticket: GenerationTicket) -> GenerationTicket | None:
+        """Non-blocking readiness check: the ticket when done, else None."""
+        with self._mu:
+            return ticket if ticket.done else None
+
+    def disown(self, ticket: GenerationTicket,
+               charge_cb: Callable[[GenerationTicket, float], None] | None
+               ) -> float:
+        """Release a ticket nobody will harvest (its tuner is retiring).
+
+        Returns the unclaimed charge of an already-completed ticket (the
+        caller bills it); a still-in-flight ticket is converted to a
+        speculative one so ``charge_cb`` bills it at completion — either
+        way the compile cost reaches the budget exactly once.
+        """
+        with self._mu:
+            if ticket.done:
+                charge, ticket.gen_charge_s = ticket.gen_charge_s, 0.0
+                return charge
+            ticket.speculative = True
+            ticket._charge_cb = charge_cb
+            return 0.0
+
+    @property
+    def in_flight(self) -> int:
+        with self._mu:
+            return len(self._inflight)
+
+    def stats(self) -> dict[str, Any]:
+        with self._mu:
+            return {
+                "mode": self.mode,
+                "submitted": self.submitted,
+                "completed": self.completed,
+                "failed": self.failed,
+                "speculative_submitted": self.speculative_submitted,
+                "joined": self.joined,
+                "in_flight": len(self._inflight),
+            }

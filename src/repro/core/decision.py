@@ -41,13 +41,28 @@ class TuningAccounts:
 
     app_start_s: float = 0.0            # perf_counter at app start
     tuning_spent_s: float = 0.0         # total generation+evaluation time
+    gen_spent_s: float = 0.0            # generation (compile) component of
+                                        # tuning_spent_s — charged in full
+                                        # even when compilation overlapped
+                                        # the hot path (async pipeline)
+    gen_stall_s: float = 0.0            # generation time the hot path
+                                        # actually WAITED for (synchronous
+                                        # compiles); 0 for cache hits and
+                                        # async-overlapped generations
+    eval_spent_s: float = 0.0           # measurement component
+    gen_requests: int = 0               # async generations requested
     init_spent_s: float = 0.0           # reference baseline measurement
                                         # (budgeted only when the policy
                                         # sets charge_init)
     gained_s: float = 0.0               # estimated saved time so far
     busy_s: float = 0.0                 # estimated kernel-call time observed
                                         # (calls x per-call score)
-    observed_call_s: float = 0.0        # per-call score of the active kernel
+    observed_call_s: float = 0.0        # per-call latency fed to the
+                                        # headroom gate: an EWMA of real
+                                        # call latencies when the tuner is
+                                        # coordinator-managed (ManagedTuner
+                                        # times every call), else the
+                                        # active kernel's measured score
     kernel_calls: int = 0               # invocation counter (instrumentation)
     regenerations: int = 0              # variants generated+evaluated
     swaps: int = 0                      # active-function replacements

@@ -162,6 +162,28 @@ def virtual_kernel(clock: VirtualClock, cost_s: float, tag: Any = None):
     return fn
 
 
+def virtual_compilette(clock: VirtualClock, name: str, space, cost_fn,
+                       *, gen_cost_s: float = 0.0):
+    """A compilette over virtual kernels with a SIMULATED compile cost.
+
+    ``cost_fn(point) -> seconds`` prices execution; ``gen_cost_s`` prices
+    generation. The compile cost is *declared* (``Compilette.gen_cost_s``)
+    rather than burned inside the generator, so the party that decides
+    stall-vs-overlap charges it correctly: a synchronous ``wake()``
+    advances the virtual clock by it (the hot path stalls, exactly like a
+    real inline XLA compile), while the async pipeline and cache hits
+    charge it to the budget without moving the clock — which is the
+    whole point of double-buffered generation, and what the no-sleep
+    tests in ``tests/test_generation_pipeline.py`` assert.
+    """
+    from repro.core.compilette import Compilette
+
+    def gen(point, **spec):
+        return virtual_kernel(clock, cost_fn(point), tag=dict(point))
+
+    return Compilette(name, space, gen, gen_cost_s=gen_cost_s)
+
+
 class VirtualClockEvaluator:
     """Deterministic evaluator driven by simulated time (no wall clock).
 

@@ -7,11 +7,13 @@ behind a single propose/report API. This module provides that API:
 
   * :class:`SearchStrategy` — the protocol every searcher implements:
     ``next_point() -> Point | None`` (pull-based proposal; ``None`` when
-    exhausted), ``report(point, score_s) -> bool`` (feed a measurement
-    back; True when it is the new best) and the ``finished`` property.
-    The base class centralizes seen-point deduplication (a strategy never
-    re-proposes a point), best tracking, history, warm-start seed points
-    and the ``run_to_completion`` driver.
+    exhausted), ``peek(n)`` (upcoming proposals WITHOUT consuming them —
+    the coordinator prefetch-compiles them while a measurement runs),
+    ``report(point, score_s) -> bool`` (feed a measurement back; True
+    when it is the new best) and the ``finished`` property. The base
+    class centralizes seen-point deduplication (a strategy never
+    re-proposes a point), best tracking, history, warm-start seed points,
+    the peek buffer and the ``run_to_completion`` driver.
   * a **string-keyed registry** — strategies self-register under a name:
 
         @register_strategy("my_search")
@@ -105,6 +107,10 @@ class SearchStrategy:
         self.best_score: float = float("inf")
         self.history: list[tuple[Point, float]] = []
         self._seen: set[tuple] = set()
+        # peek(n) buffer: upcoming proposals drawn ahead of consumption;
+        # next_point() serves from here first, so peeked order == proposed
+        # order (absent intervening reports that reshape the search).
+        self._peeked: list[Point] = []
         # Warm-start: seed points (e.g. a persisted best from a previous
         # run) are proposed before any enumeration, so a warm process
         # re-validates its known-best variant with a single regeneration.
@@ -122,25 +128,57 @@ class SearchStrategy:
         """React to a reported measurement (e.g. recenter a neighborhood)."""
 
     # ------------------------------------------------------------------ api
-    def next_point(self) -> Point | None:
-        """Next variant to generate+evaluate, or None when done.
-
-        Never yields the same point twice (``_propose`` duplicates are
-        swallowed here) and never yields a hole.
-        """
-        if self.state.finished:
-            return None
+    def _draw(self) -> Point | None:
+        """Pull one deduplicated, valid candidate from ``_propose``."""
         while True:
             point = self._propose()
             if point is None:
-                self.state.finished = True
                 return None
             key = self.space.key(point)
             if key in self._seen:
                 continue
             self._seen.add(key)
-            self.state.n_proposed += 1
-            return dict(point)
+            return point
+
+    def next_point(self) -> Point | None:
+        """Next variant to generate+evaluate, or None when done.
+
+        Never yields the same point twice (``_propose`` duplicates are
+        swallowed here) and never yields a hole. Points surfaced by a
+        prior :meth:`peek` are served first, in peeked order.
+        """
+        if self.state.finished:
+            return None
+        if self._peeked:
+            point = self._peeked.pop(0)
+        else:
+            point = self._draw()
+            if point is None:
+                self.state.finished = True
+                return None
+        self.state.n_proposed += 1
+        return dict(point)
+
+    def peek(self, n: int = 1) -> list[Point]:
+        """Upcoming proposals WITHOUT consuming them (speculative prefetch).
+
+        Returns up to ``n`` points that subsequent :meth:`next_point`
+        calls will yield (in order, provided no intervening ``report``
+        reshapes the search — a recentering strategy may then serve the
+        already-peeked points before its new neighborhood). Peeking past
+        the end of the space returns fewer points but does NOT mark the
+        strategy finished: buffered points are still pending proposal.
+        The coordinator uses this to compile the next 1–2 candidates in
+        the background while the current measurement runs.
+        """
+        if self.state.finished:
+            return []
+        while len(self._peeked) < n:
+            point = self._draw()
+            if point is None:
+                break
+            self._peeked.append(point)
+        return [dict(p) for p in self._peeked[:n]]
 
     def report(self, point: Point, score_s: float) -> bool:
         """Feed a measurement back; returns True if it is the new best."""

@@ -25,6 +25,12 @@ from repro.core.tuning_space import Point
 
 
 def _canon(obj: Any) -> str:
+    """Canonical JSON identity used by BOTH the tuned-point registry and
+    the generation cache (``repro.core.compilette``), so the two key
+    formats can never silently diverge. Deliberately STRICT: a
+    non-JSON-serializable specialization value raises here, loudly —
+    stringifying it would embed memory addresses in persisted keys and
+    silently break warm starts across restarts."""
     return json.dumps(obj, sort_keys=True, separators=(",", ":"))
 
 
@@ -78,15 +84,41 @@ def device_fallbacks(device: str) -> tuple[str, ...]:
     return tuple(out)
 
 
+_META_KEY = "__registry_meta__"
+
+
 class TunedRegistry:
     """Thread-safe: the coordinator's tuning thread calls ``put`` while
     the application thread may be inside ``save`` (request end,
     checkpoint), so mutation and serialization are serialized on an
-    internal lock."""
+    internal lock.
 
-    def __init__(self) -> None:
+    **Aging.** Without hygiene the JSON accumulates dead entries forever
+    (retired shapes, superseded compilers). Every entry carries a
+    last-used stamp in *save generations* (a monotonic counter persisted
+    with the file — wall time would mis-age registries that are loaded
+    rarely but saved often). ``put`` and lookup hits refresh the stamp;
+    ``save()`` advances the generation and compacts entries that (a) went
+    unused for ``max_idle_saves`` saves or (b) were recorded under a
+    *different* compiler version than the running one (they can only ever
+    miss). Versionless legacy keys carry no compiler claim and age out
+    through (a) alone. ``max_idle_saves=None`` disables idle compaction.
+
+    The horizon is measured in SAVES, so size it to the caller's save
+    cadence: the serve loop saves once per request (managed tuners are
+    re-stamped by the pre-save flush, but an *evicted* bucket's entry is
+    only refreshed if its shape re-registers), while a training job
+    saves once per checkpoint. The default of 64 keeps a retired serve
+    bucket warm for 64 requests and a checkpoint-style entry for 64
+    checkpoints before reclaiming it.
+    """
+
+    def __init__(self, *, max_idle_saves: int | None = 64) -> None:
         self._table: dict[str, dict[str, Any]] = {}
         self._mu = threading.Lock()
+        self._generation = 0
+        self.max_idle_saves = max_idle_saves
+        self.compacted_total = 0
 
     @staticmethod
     def key(kernel: str, specialization: dict[str, Any], device: str) -> str:
@@ -105,18 +137,25 @@ class TunedRegistry:
         with self._mu:
             cur = self._table.get(k)
             if cur is None or score_s < cur["score_s"]:
-                entry = {"point": dict(point), "score_s": float(score_s)}
+                entry = {"point": dict(point), "score_s": float(score_s),
+                         "gen": self._generation}
                 if strategy is not None:
                     # provenance: which search strategy found this best
                     entry["strategy"] = str(strategy)
                 self._table[k] = entry
+            else:
+                # a worse score still proves the entry is in use
+                cur["gen"] = self._generation
 
     def get(
         self, kernel: str, specialization: dict[str, Any], device: str
     ) -> Point | None:
         with self._mu:
             entry = self._table.get(self.key(kernel, specialization, device))
-            return dict(entry["point"]) if entry else None
+            if entry is None:
+                return None
+            entry["gen"] = self._generation   # last-used stamp
+            return dict(entry["point"])
 
     def get_warm(
         self, kernel: str, specialization: dict[str, Any], device: str
@@ -135,10 +174,46 @@ class TunedRegistry:
         with self._mu:
             return len(self._table)
 
+    # ---------------------------------------------------------- compaction
+    @staticmethod
+    def _entry_compiler(key: str) -> str | None:
+        """Compiler version claimed by an entry's device key, if any."""
+        try:
+            device = json.loads(key).get("d", "")
+        except (json.JSONDecodeError, AttributeError):
+            return None
+        parts = str(device).split(":")
+        if len(parts) >= 3 and parts[2].startswith(("jax", "nojax")):
+            return parts[2]
+        return None   # versionless legacy key: no claim to test
+
+    def _compact_locked(self) -> int:
+        """Drop idle and foreign-compiler entries (caller holds the lock)."""
+        current = compiler_version()
+        dead = []
+        for k, entry in self._table.items():
+            claimed = self._entry_compiler(k)
+            if claimed is not None and claimed != current:
+                dead.append(k)
+                continue
+            if (self.max_idle_saves is not None
+                    and self._generation - entry.get("gen", 0)
+                    >= self.max_idle_saves):
+                dead.append(k)
+        for k in dead:
+            del self._table[k]
+        self.compacted_total += len(dead)
+        return len(dead)
+
     # ------------------------------------------------------------------ io
     def save(self, path: str) -> None:
         with self._mu:
-            snapshot = {k: dict(v) for k, v in self._table.items()}
+            self._generation += 1
+            self._compact_locked()
+            snapshot: dict[str, Any] = {
+                _META_KEY: {"generation": self._generation}}
+            snapshot.update(
+                {k: dict(v) for k, v in self._table.items()})
         os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
         fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".")
         try:
@@ -160,12 +235,20 @@ class TunedRegistry:
                 with open(path) as f:
                     table = json.load(f)
                 if isinstance(table, dict):
+                    meta = table.pop(_META_KEY, None)
+                    if (isinstance(meta, dict)
+                            and isinstance(meta.get("generation"), int)):
+                        reg._generation = meta["generation"]
                     reg._table = {
                         k: v for k, v in table.items()
                         if isinstance(v, dict)
                         and isinstance(v.get("point"), dict)
                         and isinstance(v.get("score_s"), (int, float))
                     }
+                    # pre-aging files carry no stamps: treat every entry
+                    # as freshly used rather than instantly idle
+                    for v in reg._table.values():
+                        v.setdefault("gen", reg._generation)
             except (json.JSONDecodeError, OSError, UnicodeDecodeError):
                 pass
         return reg

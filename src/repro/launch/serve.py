@@ -42,6 +42,13 @@ def main() -> None:
     ap.add_argument("--slo", type=float, default=None,
                     help="per-step latency SLO in seconds "
                          "(headroom-gates tuning)")
+    ap.add_argument("--sync-generation", dest="async_generation",
+                    action="store_false", default=True,
+                    help="compile candidate variants inline on the "
+                         "request path (paper's original synchronous "
+                         "cycle) instead of the background pipeline")
+    ap.add_argument("--prefetch", type=int, default=1,
+                    help="speculative compiles per tuning slot (0=off)")
     args = ap.parse_args()
 
     import jax
@@ -61,6 +68,8 @@ def main() -> None:
         tune_slo_s=args.slo,
         seq_buckets=args.seq_buckets,
         registry_path=args.registry,
+        async_generation=args.async_generation,
+        prefetch=args.prefetch,
     )
     coordinator = make_serve_coordinator(serve) if args.autotune else None
 
@@ -81,9 +90,12 @@ def main() -> None:
         if args.autotune:
             a = out["autotune"]
             lc = a["lifecycle"]
+            gc = a["generation_cache"]
             line += (f"  [tuning({args.strategy}): "
                      f"{a['regenerations']} regens, {a['swaps']} swaps, "
                      f"overhead {a['overhead_frac']*100:.1f}%, "
+                     f"gen stall {a['gen_stall_s']*1e3:.0f} ms, "
+                     f"cache {gc['hit_rate']*100:.0f}% hit, "
                      f"tuners {a['n_kernels']} "
                      f"({lc['converged']} converged, "
                      f"{lc['retired']} retired)]")

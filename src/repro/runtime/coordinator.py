@@ -24,6 +24,16 @@ the paper's economics across both dimensions:
   * **one tuning thread per process** — instead of one thread per
     kernel, a single coordinator thread (or cooperative ``maybe_pump``
     calls on the hot path) drives every managed autotuner;
+  * **double-buffered variant generation** — with ``async_generation``
+    on, a single background :class:`~repro.core.AsyncGenerator` compiles
+    candidates while the current active functions keep serving (the
+    paper's "new version in a code buffer"), every generation goes
+    through a process-wide :class:`~repro.core.GenerationCache` (a point
+    revisited after bucketing, eviction or warm start never recompiles),
+    and the scheduler prefetch-compiles the next ``prefetch`` proposals
+    of the kernel it just served (``SearchStrategy.peek``). Generation
+    time is charged to the shared budget in full either way — only the
+    hot-path *stall* (``gen_stall_s``) disappears;
   * **a managed lifecycle** — a :class:`~repro.runtime.lifecycle.TunerLifecycle`
     buckets shape-like specializations (so varied prompt lengths share
     tuners), marks exhausted tuners ``CONVERGED`` (releasing their pinned
@@ -45,7 +55,12 @@ import time
 from typing import Any, Callable
 
 from repro.core.autotuner import OnlineAutotuner
-from repro.core.compilette import Compilette
+from repro.core.compilette import (
+    AsyncGenerator,
+    Compilette,
+    GenerationCache,
+    GenerationTicket,
+)
 from repro.core.decision import RegenerationPolicy, TuningAccounts
 from repro.core.explorer import SearchStrategy
 from repro.core.persistence import TunedRegistry, device_fingerprint
@@ -80,8 +95,13 @@ class ManagedTuner:
     calls_at_last_wake: int = 0
 
     def __call__(self, *args: Any) -> Any:
-        self.last_used_s = self.clock()
-        return self.tuner(*args)
+        t0 = self.last_used_s = self.clock()
+        out = self.tuner(*args)
+        # Real per-call latency telemetry: the EWMA this feeds is what the
+        # LatencyHeadroomGate reads, so one outlier call (GC pause, first
+        # compile) cannot freeze or unfreeze tuning by itself.
+        self.tuner.observe_latency(self.clock() - t0)
+        return out
 
     @property
     def active_fn(self) -> Callable[..., Any]:
@@ -113,6 +133,9 @@ class TuningCoordinator:
         pump_every: int = 8,
         lifecycle: TunerLifecycle | None = None,
         strategy: str = "two_phase",
+        async_generation: "bool | str" = False,
+        generation_cache: GenerationCache | None = None,
+        prefetch: int = 1,
     ) -> None:
         self.policy = policy or RegenerationPolicy()
         self.clock = clock or time.perf_counter
@@ -142,6 +165,33 @@ class TuningCoordinator:
                 f"{type(strategy).__name__}; pass pre-built instances via "
                 "OnlineAutotuner(explorer=...) outside the coordinator")
         self.strategy = strategy
+        # Compiled-variant cache: one per coordinator (= per process under
+        # the one-coordinator-per-process regime), shared across every
+        # managed tuner and SURVIVING tuner retirement, so re-registered
+        # buckets and warm starts never recompile. Inject a shared
+        # instance to span multiple coordinators. The default is a
+        # BOUNDED LRU: compiled executables pin device memory, and an
+        # unbounded cache would undo the lifecycle's memory bounding.
+        # ("is not None", not truthiness: an EMPTY injected cache is falsy
+        # through __len__ but must still be adopted, or two coordinators
+        # meant to share one cache would silently get private ones)
+        self.generation_cache = (
+            generation_cache if generation_cache is not None
+            else GenerationCache(max_entries=256))
+        # Double-buffered generation: one background compile executor for
+        # the whole process (mirroring the single tuning thread). True
+        # picks the mode from the clock — a virtual (advanceable) clock
+        # gets the deterministic "manual" pipeline (jobs complete at the
+        # next pump, no sleeps), a real clock gets the worker thread.
+        # Pass "thread"/"manual" to force one.
+        if async_generation:
+            mode = (async_generation if isinstance(async_generation, str)
+                    else ("manual" if hasattr(self.clock, "advance")
+                          else "thread"))
+            self.generator: AsyncGenerator | None = AsyncGenerator(mode=mode)
+        else:
+            self.generator = None
+        self.prefetch = max(int(prefetch), 0)
         self._managed: list[ManagedTuner] = []
         self._by_key: dict[tuple[str, str], ManagedTuner] = {}
         # Accounting tombstone for retired tuners: the shared budget must
@@ -185,6 +235,9 @@ class TuningCoordinator:
                 # stale entry from an older space definition (renamed or
                 # added parameters): a cache miss, never a crash
                 warm_point = None
+            # every generation (sync or async) goes through the shared
+            # compiled-variant cache, keyed under this process's device
+            compilette.attach_cache(self.generation_cache, self.device)
             tuner = OnlineAutotuner(
                 compilette,
                 evaluator,
@@ -198,6 +251,7 @@ class TuningCoordinator:
                 strategy=strategy if strategy is not None else self.strategy,
                 clock=self.clock,
                 budget_gate=self._shared_budget_gate,
+                generator=self.generator,
             )
             managed = ManagedTuner(
                 name=name,
@@ -216,8 +270,9 @@ class TuningCoordinator:
     # (observed_call_s is deliberately NOT additive: it is a per-kernel
     # latency — see _shared_budget_gate — and only max'd for reporting).
     _ADDITIVE_FIELDS = (
-        "tuning_spent_s", "gained_s", "busy_s", "kernel_calls",
-        "regenerations", "swaps", "init_spent_s",
+        "tuning_spent_s", "gen_spent_s", "gen_stall_s", "eval_spent_s",
+        "gained_s", "busy_s", "kernel_calls", "regenerations",
+        "gen_requests", "swaps", "init_spent_s",
     )
 
     @classmethod
@@ -287,30 +342,110 @@ class TuningCoordinator:
         """One scheduling slot: wake the best kernel that can use it.
 
         Returns True when the wake swapped in a faster variant. A kernel
-        frozen by its own latency-headroom gate passes the slot to the
-        next candidate (an over-SLO prefill must not starve a fast decode
-        step forever); a shared-budget denial instead ends the slot, so
-        accruing budget stays earmarked for the most valuable kernel
-        rather than leaking to cheaper, lower-value ones.
+        frozen by its own latency-headroom gate — or merely waiting for
+        its background compile — passes the slot to the next candidate
+        (an over-SLO prefill must not starve a fast decode step forever);
+        a shared-budget denial instead ends the slot, so accruing budget
+        stays earmarked for the most valuable kernel rather than leaking
+        to cheaper, lower-value ones.
+
+        With async generation a productive wake is either a *request*
+        (next variant submitted to the background executor) or a
+        *harvest* (compiled candidate evaluated, maybe swapped); queued
+        jobs are completed at the top of the pump, so in the
+        deterministic "manual" mode a variant requested at pump *k* is
+        harvestable at pump *k+1* — never sooner.
         """
+        if self.generator is not None:
+            self.generator.run_pending()
         self.sweep()
         with self._lock:
             candidates = self._candidates()
         for m in candidates:
-            regens_before = m.tuner.accounts.regenerations
-            swapped = m.tuner.wake()
-            if m.tuner.accounts.regenerations == regens_before:
-                # the slot did nothing here: leave this kernel's hotness
-                # signal intact — resetting it would starve exactly the
-                # kernel we judged most valuable
-                est = m.tuner._cost_ema or 0.0
-                if self.policy.headroom_allows(m.tuner.accounts, est):
-                    return False   # shared-budget denial: slot ends
-                continue           # per-kernel headroom freeze: next
-            m.calls_at_last_wake = m.tuner.accounts.kernel_calls
-            self._flush_best(m)
-            return swapped
+            t = m.tuner
+            # progress = a measurement reported (sync cycle, async
+            # harvest, or a failed generation logged as a hole) or an
+            # async generation requested
+            before = t.explorer.state.n_reported + t.accounts.gen_requests
+            swapped = t.wake()
+            if t.explorer.state.n_reported + t.accounts.gen_requests != before:
+                m.calls_at_last_wake = t.accounts.kernel_calls
+                self._flush_best(m)
+                self._prefetch(m)
+                return swapped
+            if t.generation_in_flight:
+                # waiting on the compile executor: the slot moves on, the
+                # hot path keeps running the current active_fn un-stalled
+                continue
+            # the slot did nothing here: leave this kernel's hotness
+            # signal intact — resetting it would starve exactly the
+            # kernel we judged most valuable
+            est = t._cost_ema or 0.0
+            if self.policy.headroom_allows(t.accounts, est):
+                return False   # shared-budget denial: slot ends
+            continue           # per-kernel headroom freeze: next
         return False
+
+    # ----------------------------------------------------------- prefetch
+    def _prefetch(self, m: ManagedTuner) -> None:
+        """Speculatively compile the next 1–2 proposals of ``m``.
+
+        ``SearchStrategy.peek`` exposes the upcoming candidates without
+        consuming them; submitting them (speculative) fills the
+        generation cache while the current measurement — or plain
+        serving — runs, so the tuner's own later request is a hit. The
+        compile time is charged to the requesting tuner at completion
+        whether or not the variant is ever proposed: prefetch spends real
+        compute and the shared budget must see it.
+        """
+        if self.generator is None or self.prefetch <= 0:
+            return
+        t = m.tuner
+        if t.explorer.finished or m.state is not TunerState.ACTIVE:
+            return
+        now = self.clock()
+        est = t._cost_ema or 0.0
+        for point in t.explorer.peek(self.prefetch):
+            # consecutive productive wakes peek the same still-unproposed
+            # points: skip ones already resident instead of materializing
+            # throwaway hit wrappers (which would also inflate hit stats)
+            if (t.compilette.cache is not None
+                    and t.compilette.cache_key(point, t.specialization)
+                    in t.compilette.cache):
+                continue
+            if not self._shared_budget_gate(t.accounts, now, est):
+                return
+            self.generator.submit(
+                t.compilette, point, t.specialization,
+                speculative=True, charge_cb=self._speculative_charge(m))
+
+    def _speculative_charge(self, m: ManagedTuner):
+        """Charge callback billing a prefetch compile to its requester.
+
+        In "thread" mode this runs on the compile worker, so the += on
+        the shared accounts must be serialized against the tuning
+        thread's own charges (``tuner._lock``) — a lost update here would
+        leak budget past ``max_overhead_frac``.
+        """
+
+        def charge(ticket: GenerationTicket, seconds: float) -> None:
+            # state check and write happen under the coordinator lock —
+            # sweep() folds accounts into the tombstone under the same
+            # lock, so the charge can never land on an already-folded,
+            # discarded accounts object and vanish from the aggregate.
+            # Lock order (coordinator -> tuner) matches sweep's
+            # abandon_pending path; wake never takes the coordinator
+            # lock, so there is no cycle.
+            with self._lock:
+                if m.state is TunerState.RETIRED:
+                    self._retired_accounts.gen_spent_s += seconds
+                    self._retired_accounts.tuning_spent_s += seconds
+                else:
+                    with m.tuner._lock:
+                        m.tuner.accounts.gen_spent_s += seconds
+                        m.tuner.accounts.tuning_spent_s += seconds
+
+        return charge
 
     # ----------------------------------------------------------- lifecycle
     def _flush_best(self, m: ManagedTuner) -> None:
@@ -349,6 +484,10 @@ class TuningCoordinator:
                     m.state = TunerState.RETIRED
                     self._flush_best(m)
                     release_evaluator_closure(m.tuner)
+                    # an unharvested compile must still be billed: done
+                    # tickets charge the accounts now (folded below),
+                    # in-flight ones bill the tombstone at completion
+                    m.tuner.abandon_pending(self._speculative_charge(m))
                     self._fold_into_tombstone(m)
                     self._managed.remove(m)
                     self._by_key.pop(
@@ -418,6 +557,8 @@ class TuningCoordinator:
 
     def close(self) -> None:
         self.stop_thread()
+        if self.generator is not None:
+            self.generator.shutdown()
         self.save_registry()
 
     # ------------------------------------------------------------- reports
@@ -430,6 +571,14 @@ class TuningCoordinator:
             "regenerations": agg.regenerations,
             "swaps": agg.swaps,
             "tuning_spent_s": agg.tuning_spent_s,
+            # component split: tuning_spent_s ≈ gen + eval; the paper's
+            # per-component overhead-fraction claim is checkable here,
+            # and gen_stall_s isolates what the hot path actually waited
+            # for (0 when every compile was overlapped or cache-hit)
+            "gen_spent_s": agg.gen_spent_s,
+            "gen_stall_s": agg.gen_stall_s,
+            "eval_spent_s": agg.eval_spent_s,
+            "gen_requests": agg.gen_requests,
             "init_spent_s": agg.init_spent_s,
             "busy_s": agg.busy_s,
             "gained_s": agg.gained_s,
@@ -445,6 +594,10 @@ class TuningCoordinator:
                                  if m.state is TunerState.CONVERGED),
                 "retired": self._n_retired,
             },
+            "generation_cache": self.generation_cache.stats(),
+            "generation": (self.generator.stats()
+                           if self.generator is not None
+                           else {"mode": "sync"}),
             "kernels": self._kernel_stats(),
         }
 

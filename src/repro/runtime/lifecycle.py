@@ -22,7 +22,11 @@ without bound. The :class:`TunerLifecycle` bounds both dimensions:
     so the process-wide budget does not inflate when tuners leave).
 
 A retired specialization that comes back simply re-registers; the registry
-warm-start re-validates its persisted best with a single regeneration.
+warm-start re-validates its persisted best with a single regeneration —
+and because the coordinator's :class:`~repro.core.GenerationCache` is
+owned by the *coordinator*, not the tuner, retirement releases closures
+and accounting but NOT compiled variants: the re-registered bucket's
+re-validation (and any re-exploration) is a cache hit, never a recompile.
 """
 
 from __future__ import annotations

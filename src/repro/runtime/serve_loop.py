@@ -15,7 +15,13 @@ prefill, flash-decoding KV-chunk for decode — managed by the process-wide
   * exhausted tuners converge (closures released) and idle tuners are
     evicted by the coordinator's :class:`TunerLifecycle`;
   * the search strategy is pluggable (``ServeConfig.strategy``: any name
-    registered in :mod:`repro.core.explorer`).
+    registered in :mod:`repro.core.explorer`);
+  * **candidate compilation is off the request path**: variants are
+    built by the coordinator's background :class:`AsyncGenerator` (and
+    memoized in its process-wide :class:`GenerationCache`, so buckets
+    re-registered after eviction or a restart warm-start never
+    recompile) while the live step-programs keep serving — the paper's
+    double-buffered code generation, serving-grade.
 
 Pass a long-lived coordinator (one per serving process) so tuning state,
 budget and warm-started best points persist across requests; within a
@@ -62,6 +68,8 @@ class ServeConfig:
     idle_evict_s: float | None = 300.0  # retire tuners idle this long
     registry_path: str | None = None  # warm-start across server restarts
     pump_every: int = 4               # decode steps between tuning slots
+    async_generation: bool = True     # compile variants off the hot path
+    prefetch: int = 1                 # speculative compiles per slot (0=off)
 
 
 def _prefill_compilette(model_cfg: ModelConfig, seq: int) -> Compilette:
@@ -84,7 +92,12 @@ def _prefill_compilette(model_cfg: ModelConfig, seq: int) -> Compilette:
         )
         return jax.jit(build_model(cfg2).prefill)
 
-    return Compilette("serve_prefill", space, gen)
+    # cache_token: compilettes named "serve_prefill" exist per model
+    # config; without the token the process-wide GenerationCache could
+    # hand one model's compiled step-program to another with the same
+    # shape specialization
+    return Compilette("serve_prefill", space, gen,
+                      cache_token=repr(model_cfg))
 
 
 def _decode_compilette(model_cfg: ModelConfig, max_len: int) -> Compilette:
@@ -100,7 +113,8 @@ def _decode_compilette(model_cfg: ModelConfig, max_len: int) -> Compilette:
             model_cfg, decode_k_chunk=point["decode_k_chunk"])
         return jax.jit(build_model(cfg2).decode_step)
 
-    return Compilette("serve_decode", space, gen)
+    return Compilette("serve_decode", space, gen,
+                      cache_token=repr(model_cfg))
 
 
 def make_serve_coordinator(
@@ -126,6 +140,11 @@ def make_serve_coordinator(
         ),
         strategy=serve.tune_strategy,
         clock=clock,
+        # double-buffered generation: candidate step-programs compile in
+        # the background executor (and land in the process-wide variant
+        # cache) while the live prefill/decode functions keep serving
+        async_generation=serve.async_generation,
+        prefetch=serve.prefetch,
     )
 
 

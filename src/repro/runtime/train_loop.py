@@ -57,6 +57,8 @@ class TrainLoopConfig:
     tune_max_overhead: float = 0.20     # generous for short demo runs
     tune_invest: float = 0.5
     tune_strategy: str = "two_phase"    # repro.core.explorer registry name
+    tune_async: bool = True             # compile variants off the step path
+    tune_prefetch: int = 1              # speculative compiles per slot
     compress_grads: bool = False
     straggler_factor: float = 3.0
     fail_at_step: int | None = None     # fault injection (tests)
@@ -103,7 +105,8 @@ def _attention_step_compilette(model_cfg: ModelConfig, model, optimizer,
         raw = _make_step(model2, optimizer, ef, cfg2)
         return jax.jit(raw, donate_argnums=())
 
-    return Compilette("train_step_attn", space, generate)
+    return Compilette("train_step_attn", space, generate,
+                      cache_token=repr(model_cfg))
 
 
 def train(
@@ -159,6 +162,11 @@ def train(
             registry_path=registry_path,
             pump_every=2,
             strategy=loop.tune_strategy,
+            # variant jitting overlaps the training steps; a resumed job
+            # whose registry warm-start re-proposes known points hits the
+            # generation cache instead of re-building the step program
+            async_generation=loop.tune_async,
+            prefetch=loop.tune_prefetch,
         )
         tuner = coordinator.register(
             "train_step_attn", comp, evaluator,

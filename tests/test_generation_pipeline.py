@@ -1,0 +1,488 @@
+"""Double-buffered variant generation: cache, async pipeline, prefetch.
+
+Everything runs on the ``VirtualClock`` with DECLARED compile costs
+(``Compilette.gen_cost_s``), so stall-vs-overlap is exact arithmetic:
+a synchronous wake advances the clock by the compile cost (the hot path
+stalls, like an inline XLA compile), while the async pipeline and cache
+hits charge the same cost to the budget without moving the clock. No
+test sleeps; the ``"manual"`` AsyncGenerator completes jobs only at
+``run_pending()`` — i.e. at the next coordinator pump.
+"""
+
+import pytest
+
+from repro.core import (
+    AsyncGenerator,
+    GenerationCache,
+    LatencyHeadroomGate,
+    OnlineAutotuner,
+    Param,
+    RegenerationPolicy,
+    VirtualClock,
+    VirtualClockEvaluator,
+    product_space,
+    virtual_compilette,
+    virtual_kernel,
+)
+from repro.runtime.coordinator import TuningCoordinator
+from repro.runtime.lifecycle import TunerLifecycle, TunerState
+
+GEN_COST = 0.010
+
+
+def space(n_unroll=4):
+    return product_space(
+        [Param("unroll", (1, 2, 4, 8)[:n_unroll], phase=1)])
+
+
+def cost(p):
+    return 0.008 / p["unroll"]
+
+
+def counted_compilette(clock, name="k", gen_cost_s=GEN_COST, counter=None):
+    """virtual_compilette whose underlying ``_generate`` counts calls."""
+    comp = virtual_compilette(clock, name, space(), cost,
+                              gen_cost_s=gen_cost_s)
+    counter = counter if counter is not None else {"n": 0}
+    inner = comp._generate
+
+    def counting(point, **spec):
+        counter["n"] += 1
+        return inner(point, **spec)
+
+    comp._generate = counting
+    comp.compiles = counter  # type: ignore[attr-defined]
+    return comp
+
+
+def make_coord(clock, *, async_generation=False, cache=None, prefetch=0,
+               policy=None, lifecycle=None):
+    return TuningCoordinator(
+        policy=policy or RegenerationPolicy(1.0, 0.5),
+        device="test:v", clock=clock, async_generation=async_generation,
+        generation_cache=cache, prefetch=prefetch,
+        lifecycle=lifecycle or TunerLifecycle(seq_buckets=True,
+                                              idle_evict_s=None))
+
+
+def drive(coord, m, calls=300):
+    for i in range(calls):
+        m(i)
+        coord.pump()
+
+
+# ---------------------------------------------------------------- cache
+def test_cache_hit_skips_generate_and_costs_nothing():
+    clock = VirtualClock()
+    cache = GenerationCache()
+    comp = counted_compilette(clock)
+    comp.attach_cache(cache, "test:v")
+    a = comp.generate({"unroll": 2})
+    assert a.meta["source"] == "compiled" and a.generation_time_s == GEN_COST
+    b = comp.generate({"unroll": 2})
+    assert b.meta["source"] == "cache"
+    assert b.generation_time_s == 0.0            # nothing charged on a hit
+    assert b.meta["compiled_in_s"] == GEN_COST   # provenance kept
+    assert b.fn is a.fn                          # the SAME executable
+    assert comp.compiles["n"] == 1               # _generate ran once, ever
+    assert cache.stats() == {"entries": 1, "hits": 1, "misses": 1,
+                             "evictions": 0, "hit_rate": 0.5}
+
+
+def test_cache_key_separates_identities():
+    pt, spec = {"unroll": 2}, {"seq": 128}
+    base = GenerationCache.key("k", pt, spec, "dev", None)
+    assert GenerationCache.key("k", pt, spec, "dev", None) == base
+    # dict-order independence
+    assert GenerationCache.key(
+        "k", pt, dict(reversed(list({"seq": 128, "b": 1}.items()))),
+        "dev", None) == GenerationCache.key(
+        "k", pt, {"b": 1, "seq": 128}, "dev", None)
+    for other in (
+        GenerationCache.key("k2", pt, spec, "dev", None),     # kernel
+        GenerationCache.key("k", {"unroll": 4}, spec, "dev", None),  # point
+        GenerationCache.key("k", pt, {"seq": 256}, "dev", None),     # spec
+        GenerationCache.key("k", pt, spec, "dev2", None),     # device
+        GenerationCache.key("k", pt, spec, "dev", "modelB"),  # token
+    ):
+        assert other != base
+
+
+def test_cache_lru_bound_evicts_oldest():
+    cache = GenerationCache(max_entries=2)
+    clock = VirtualClock()
+    comp = counted_compilette(clock)
+    comp.attach_cache(cache, "test:v")
+    for u in (1, 2, 4):
+        comp.generate({"unroll": u})
+    assert len(cache) == 2 and cache.evictions == 1
+    comp.generate({"unroll": 1})                 # evicted: recompiles
+    assert comp.compiles["n"] == 4
+    comp.generate({"unroll": 4})                 # still resident: hit
+    assert comp.compiles["n"] == 4
+
+
+def test_cache_entries_survive_retire_and_reregister():
+    """Acceptance: a bucket retired by the lifecycle and re-registered
+    later re-validates (and re-explores) from the cache — the same
+    (point, spec, fingerprint) never reaches ``_generate`` twice."""
+    clock = VirtualClock()
+    ev = VirtualClockEvaluator(clock)
+    coord = make_coord(
+        clock, lifecycle=TunerLifecycle(seq_buckets=True, idle_evict_s=10.0))
+    counter = {"n": 0}
+    m = coord.register(
+        "k", counted_compilette(clock, counter=counter), ev,
+        specialization={"seq": 120},
+        reference_fn=virtual_kernel(clock, 0.008))
+    drive(coord, m, 200)
+    assert m.tuner.explorer.finished and counter["n"] == 4
+    clock.advance(11.0)
+    assert coord.sweep() == [m]                  # idle-evicted
+    assert m.state is TunerState.RETIRED
+    # same pow2 bucket (150 -> 128) comes back: every generation must hit
+    m2 = coord.register(
+        "k", counted_compilette(clock, counter=counter), ev,
+        specialization={"seq": 150},
+        reference_fn=virtual_kernel(clock, 0.008))
+    assert m2 is not m and m2.warm_started
+    drive(coord, m2, 200)
+    assert m2.tuner.accounts.regenerations > 0
+    assert counter["n"] == 4                     # zero recompiles
+    assert m2.tuner.accounts.gen_spent_s == 0.0  # hits charge nothing
+    assert coord.stats()["generation_cache"]["hits"] > 0
+
+
+def test_distinct_buckets_miss_each_other():
+    clock = VirtualClock()
+    ev = VirtualClockEvaluator(clock)
+    coord = make_coord(clock)
+    counter = {"n": 0}
+    a = coord.register("k", counted_compilette(clock, counter=counter), ev,
+                       specialization={"seq": 120},
+                       reference_fn=virtual_kernel(clock, 0.008))
+    b = coord.register("k", counted_compilette(clock, counter=counter), ev,
+                       specialization={"seq": 300},
+                       reference_fn=virtual_kernel(clock, 0.008))
+    assert a is not b
+    drive(coord, a, 200)
+    drive(coord, b, 200)
+    # different buckets (128 vs 256) are different specializations:
+    # each compiles its own 4 variants, no cross-bucket aliasing
+    assert counter["n"] == 8
+
+
+# ------------------------------------------------------------- pipeline
+def test_async_wake_requests_then_harvests_after_run_pending():
+    """The double-buffer protocol, step by step: wake #1 requests (no
+    stall, no measurement), the compile completes at run_pending, wake #2
+    harvests (evaluation only)."""
+    clock = VirtualClock()
+    ev = VirtualClockEvaluator(clock)
+    gen = AsyncGenerator(mode="manual")
+    comp = counted_compilette(clock)
+    comp.attach_cache(GenerationCache(), "test:v")
+    at = OnlineAutotuner(
+        comp, ev, policy=RegenerationPolicy(1.0, 0.5),
+        reference_fn=virtual_kernel(clock, 0.008),
+        wake_every=None, clock=clock, generator=gen)
+    t0 = clock()
+    assert at.wake() is False
+    assert at.generation_in_flight
+    assert at.accounts.gen_requests == 1 and at.accounts.regenerations == 0
+    assert clock() == t0                         # request cost: zero clock
+    assert at.wake() is False                    # still compiling: no-op
+    assert clock() == t0
+    assert gen.run_pending() == 1
+    assert not at.generation_in_flight           # ready, awaiting harvest
+    at.wake()                                    # harvest: evaluate only
+    assert at.accounts.regenerations == 1
+    assert at.accounts.gen_spent_s == GEN_COST   # budget charged in full
+    assert at.accounts.gen_stall_s == 0.0        # ...but nothing stalled
+    assert clock() == t0 + 0.008                 # only the evaluation ran
+
+
+def test_hot_path_never_stalls_under_async_generation():
+    """Acceptance: with async generation the virtual clock NEVER advances
+    by compile cost (all generation overlapped or cache-hit), yet
+    ``gen_spent_s`` accrues the full compile cost against the budget."""
+    results = {}
+    for mode in ("sync", "async"):
+        clock = VirtualClock()
+        ev = VirtualClockEvaluator(clock)
+        coord = make_coord(clock, async_generation=(mode == "async"))
+        m = coord.register("k", counted_compilette(clock), ev,
+                           reference_fn=virtual_kernel(clock, 0.008))
+        drive(coord, m, 400)
+        assert m.tuner.explorer.finished
+        results[mode] = (coord.stats(), clock())
+    sync_s, sync_t = results["sync"]
+    async_s, async_t = results["async"]
+    # both charge the identical full compile bill to the shared budget
+    assert sync_s["gen_spent_s"] == async_s["gen_spent_s"] == 4 * GEN_COST
+    # the synchronous cycle stalls the app by exactly that; async by zero
+    assert sync_s["gen_stall_s"] == 4 * GEN_COST
+    assert async_s["gen_stall_s"] == 0.0
+    # and the app-visible difference is real wall time saved
+    assert async_t < sync_t
+
+
+def test_async_generation_failure_is_reported_hole():
+    """A late-found hole is reported once and — even when prefetch
+    already tried (and was billed for) the same point — never handed to
+    ``_generate`` a second time (negative memo)."""
+    clock = VirtualClock()
+    ev = VirtualClockEvaluator(clock)
+    sp = product_space([Param("unroll", (1, 2, 4, 8), phase=1)])
+    attempts = {"hole": 0}
+
+    def gen(point, **spec):
+        if point["unroll"] == 4:
+            attempts["hole"] += 1
+            raise RuntimeError("cannot generate")
+        return virtual_kernel(clock, cost(point))
+
+    from repro.core import Compilette
+    comp = Compilette("holey", sp, gen, gen_cost_s=GEN_COST)
+    coord = make_coord(clock, async_generation=True, prefetch=2)
+    m = coord.register("holey", comp, ev,
+                       reference_fn=virtual_kernel(clock, 0.008))
+    drive(coord, m, 400)
+    assert m.tuner.explorer.finished
+    assert (m.tuner.explorer.best_point or {}).get("unroll") != 4
+    # the failed point was reported as a hole, not retried forever
+    holes = [s for _, s in m.tuner.explorer.history if s == float("inf")]
+    assert len(holes) == 1
+    assert attempts["hole"] == 1    # speculative failure memoized
+
+
+def test_repeated_point_never_compiles_twice_across_processes():
+    """Acceptance: cold process compiles each point once; a warm-start
+    replay sharing the process-wide cache compiles NOTHING (100% hit
+    rate, zero stall) while still re-validating through the registry."""
+    from repro.core import TunedRegistry
+
+    cache = GenerationCache()
+    registry = TunedRegistry()
+    counter = {"n": 0}
+
+    def run_process():
+        clock = VirtualClock()
+        ev = VirtualClockEvaluator(clock)
+        coord = TuningCoordinator(
+            policy=RegenerationPolicy(1.0, 0.5), device="test:v",
+            clock=clock, registry=registry, async_generation=True,
+            generation_cache=cache, prefetch=1)
+        m = coord.register("k", counted_compilette(clock, counter=counter),
+                           ev, reference_fn=virtual_kernel(clock, 0.008))
+        h0, mi0 = cache.hits, cache.misses
+        drive(coord, m, 400)
+        s = coord.stats()
+        return m, s, cache.hits - h0, cache.misses - mi0
+
+    m_cold, s_cold, _, _ = run_process()
+    assert m_cold.tuner.explorer.finished and counter["n"] == 4
+    m_warm, s_warm, hits, misses = run_process()
+    assert m_warm.warm_started
+    assert counter["n"] == 4                     # nothing recompiled
+    assert misses == 0 and hits > 0              # 100% generation-cache hit
+    assert s_warm["gen_stall_s"] == 0.0
+    assert s_warm["gen_spent_s"] == 0.0          # hits cost the budget nothing
+    assert m_warm.tuner._active_life.point == {"unroll": 8}
+
+
+# ------------------------------------------------------------- prefetch
+def test_prefetch_compiles_ahead_without_duplicates():
+    clock = VirtualClock()
+    ev = VirtualClockEvaluator(clock)
+    coord = make_coord(clock, async_generation=True, prefetch=2)
+    m = coord.register("k", counted_compilette(clock), ev,
+                       reference_fn=virtual_kernel(clock, 0.008))
+    drive(coord, m, 400)
+    assert m.tuner.explorer.finished
+    g = coord.stats()["generation"]
+    assert g["speculative_submitted"] > 0        # prefetch actually ran
+    # speculation never duplicates work: one compile per unique point,
+    # and every compile is charged exactly once
+    assert m.tuner.compilette.compiles["n"] == 4
+    assert coord.stats()["gen_spent_s"] == pytest.approx(4 * GEN_COST)
+    assert coord.stats()["gen_stall_s"] == 0.0
+
+
+def test_speculative_compile_charged_even_if_tuner_retires():
+    """Prefetch spends real compute: if the requesting tuner retires
+    before the job completes, the bill lands in the tombstone so the
+    shared budget keeps counting it."""
+    clock = VirtualClock()
+    ev = VirtualClockEvaluator(clock)
+    coord = make_coord(
+        clock, async_generation=True, prefetch=2,
+        lifecycle=TunerLifecycle(seq_buckets=True, idle_evict_s=5.0))
+    m = coord.register("k", counted_compilette(clock), ev,
+                       reference_fn=virtual_kernel(clock, 0.008))
+    m(0)
+    coord.pump()          # slot: request + 2 prefetch submissions queue up
+    assert coord.generator.in_flight == 3
+    assert coord._aggregate_accounts().gen_spent_s == 0.0
+    clock.advance(6.0)    # idle past the horizon while jobs are queued
+    retired = coord.sweep()
+    assert retired == [m]
+    coord.generator.run_pending()   # compiles complete after retirement
+    # every queued compile — the tuner's own pending request (disowned at
+    # retirement) AND both prefetches — is billed to the tombstone
+    agg = coord._aggregate_accounts()
+    assert agg.gen_spent_s == pytest.approx(3 * GEN_COST)
+    # and the compiled variants are still in the process-wide cache
+    assert coord.stats()["generation_cache"]["entries"] > 0
+
+
+# ------------------------------------------------- virtual serve scenario
+def test_virtual_serve_loop_zero_stall_with_full_budget_charge():
+    """Serving-grade regime (busy budget, charge_init, SLO gate) under
+    async generation: zero hot-path stall attributable to compilation,
+    while the shared budget still pays the full compile bill."""
+    clock = VirtualClock()
+    ev = VirtualClockEvaluator(clock)
+    coord = TuningCoordinator(
+        policy=RegenerationPolicy(
+            max_overhead_frac=0.3, invest_frac=0.5,
+            budget_from="busy", charge_init=True,
+            headroom=LatencyHeadroomGate(slo_s=0.050,
+                                         min_headroom_frac=0.25)),
+        device="test:v", clock=clock, async_generation=True, prefetch=1,
+        lifecycle=TunerLifecycle(seq_buckets=True, idle_evict_s=None))
+    prefill = coord.register(
+        "prefill", counted_compilette(clock, "prefill"), ev,
+        specialization={"seq": 128},
+        reference_fn=virtual_kernel(clock, 0.008))
+    decode = coord.register(
+        "decode", counted_compilette(clock, "decode"), ev,
+        specialization={"max_len": 256},
+        reference_fn=virtual_kernel(clock, 0.004))
+    for req in range(80):                        # request pattern
+        prefill(req)
+        for step in range(8):
+            decode(req)
+            coord.maybe_pump()
+    s = coord.stats()
+    assert s["swaps"] >= 2                       # both kernels improved
+    assert s["gen_stall_s"] == 0.0               # nothing ever stalled
+    assert s["gen_spent_s"] > 0                  # ...but the budget paid
+    assert s["budget_spent_s"] >= s["gen_spent_s"]
+    assert s["generation"]["mode"] == "manual"
+    # component split is coherent: gen + eval ≈ total tuning time
+    assert s["gen_spent_s"] + s["eval_spent_s"] == pytest.approx(
+        s["tuning_spent_s"])
+
+
+# -------------------------------------------------------- latency EWMA
+def make_outlier_compilette(clock, cost_box):
+    """Kernels whose calls advance the clock by a MUTABLE cost, so a test
+    can inject one slow outlier call."""
+    sp = space()
+
+    def gen(point, **spec):
+        def fn(*args):
+            clock.advance(cost_box["c"] / point["unroll"])
+            return args[0] if args else None
+        fn.score_s = cost_box["c"] / point["unroll"]
+        return fn
+
+    from repro.core import Compilette
+    return Compilette("k", sp, gen)
+
+
+def mutable_kernel(clock, cost_box):
+    """Reference function reading the same mutable cost."""
+
+    def fn(*args):
+        clock.advance(cost_box["c"])
+        return args[0] if args else None
+
+    fn.score_s = cost_box["c"]
+    return fn
+
+
+def test_one_outlier_call_cannot_freeze_headroom_gate():
+    """The gate reads an EWMA of real per-call latencies recorded by
+    ManagedTuner, not the last raw observation: a single 100x outlier
+    call must not freeze tuning (and a single fast call must not unfreeze
+    a genuinely slow kernel)."""
+    clock = VirtualClock()
+    ev = VirtualClockEvaluator(clock)
+    coord = TuningCoordinator(
+        policy=RegenerationPolicy(
+            1.0, 0.5, headroom=LatencyHeadroomGate(slo_s=0.010,
+                                                   min_headroom_frac=0.5)),
+        device="test:v", clock=clock)
+    cost_box = {"c": 0.002}
+    m = coord.register("k", make_outlier_compilette(clock, cost_box), ev,
+                       reference_fn=mutable_kernel(clock, cost_box))
+    for i in range(20):
+        m(i)
+    coord.pump()
+    regens_before = m.tuner.accounts.regenerations
+    assert regens_before > 0                     # fast kernel tunes freely
+    # ONE outlier call (7.5x the norm, eating the whole SLO headroom if
+    # read raw) then back to normal
+    cost_box["c"] = 0.015
+    m(0)
+    cost_box["c"] = 0.002
+    # the EWMA absorbed the spike: the gate stays open — a raw last-call
+    # reading of 0.015 s against the 0.010 s SLO would have frozen it
+    assert m.tuner.accounts.observed_call_s < 0.005
+    assert coord.policy.headroom_allows(m.tuner.accounts, 0.0)
+    gate = coord.policy.headroom
+    assert not gate.allows(0.015, 0.0)           # the raw reading would
+    for i in range(60):
+        m(i)
+        coord.pump()
+    assert m.tuner.accounts.regenerations > regens_before   # not frozen
+
+
+def test_ewma_tracks_sustained_latency_shift():
+    """A SUSTAINED regression (not an outlier) must still freeze tuning:
+    the EWMA converges to the new level and the gate closes."""
+    clock = VirtualClock()
+    ev = VirtualClockEvaluator(clock)
+    coord = TuningCoordinator(
+        policy=RegenerationPolicy(
+            1.0, 0.5, headroom=LatencyHeadroomGate(slo_s=0.010,
+                                                   min_headroom_frac=0.5)),
+        device="test:v", clock=clock)
+    cost_box = {"c": 0.002}
+    m = coord.register("k", make_outlier_compilette(clock, cost_box), ev,
+                       reference_fn=mutable_kernel(clock, cost_box))
+    for i in range(40):
+        m(i)
+    assert coord.policy.headroom_allows(m.tuner.accounts, 0.0)
+    cost_box["c"] = 0.2                          # sustained: every call slow
+    for i in range(40):
+        m(i)
+    assert m.tuner.accounts.observed_call_s > 0.010
+    assert not coord.policy.headroom_allows(m.tuner.accounts, 0.0)
+    regens_before = m.tuner.accounts.regenerations
+    for _ in range(40):
+        coord.pump()
+    assert m.tuner.accounts.regenerations == regens_before  # frozen
+
+
+# ------------------------------------------------------ component split
+def test_gen_spent_split_in_sync_mode():
+    """Satellite: stats() reports cumulative generation time separately
+    from measurement time, in the synchronous paper cycle too."""
+    clock = VirtualClock()
+    ev = VirtualClockEvaluator(clock)
+    coord = make_coord(clock)
+    m = coord.register("k", counted_compilette(clock), ev,
+                       reference_fn=virtual_kernel(clock, 0.008))
+    drive(coord, m, 300)
+    s = coord.stats()
+    assert s["gen_spent_s"] == pytest.approx(4 * GEN_COST)
+    assert s["gen_stall_s"] == pytest.approx(4 * GEN_COST)   # all inline
+    expected_eval = sum(cost({"unroll": u}) for u in (1, 2, 4, 8))
+    assert s["eval_spent_s"] == pytest.approx(expected_eval)
+    assert s["tuning_spent_s"] == pytest.approx(
+        s["gen_spent_s"] + s["eval_spent_s"])
+    per_kernel = s["kernels"]["k"]
+    assert per_kernel["gen_spent_s"] == pytest.approx(4 * GEN_COST)

@@ -211,6 +211,86 @@ def test_legacy_layout_entries_still_warm_start():
         assert m.warm_started, legacy_key
 
 
+# ---------------------------------------------------------- registry aging
+def test_registry_entry_ages_out_after_idle_saves():
+    """An entry untouched for max_idle_saves save cycles is compacted."""
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "tuned.json")
+        reg = TunedRegistry(max_idle_saves=3)
+        reg.put("dead", {}, "test:v", {"unroll": 1}, 0.1)
+        reg.put("live", {}, "test:v", {"unroll": 8}, 0.1)
+        for _ in range(3):
+            reg.get("live", {}, "test:v")      # lookups refresh the stamp
+            reg.save(path)
+        assert reg.get("dead", {}, "test:v") is None
+        assert reg.get("live", {}, "test:v") == {"unroll": 8}
+        assert reg.compacted_total == 1
+        # the surviving file round-trips with its generation counter
+        loaded = TunedRegistry.load(path)
+        assert len(loaded) == 1
+        assert loaded._generation == reg._generation
+
+
+def test_registry_put_and_get_warm_refresh_the_stamp():
+    """put (even with a worse score) and get_warm hits both count as use;
+    aging only bites entries nobody touches."""
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "tuned.json")
+        reg = TunedRegistry(max_idle_saves=2)
+        reg.put("k", {}, "test:v", {"unroll": 8}, 0.1)
+        for _ in range(5):
+            reg.put("k", {}, "test:v", {"unroll": 1}, 9.0)   # worse: kept
+            reg.save(path)
+        assert reg.get("k", {}, "test:v") == {"unroll": 8}
+        for _ in range(5):
+            assert reg.get_warm("k", {}, "test:v") is not None
+            reg.save(path)
+        assert len(reg) == 1 and reg.compacted_total == 0
+
+
+def test_registry_foreign_compiler_entries_compacted_on_save():
+    """Entries recorded under a different jax/jaxlib can only ever miss:
+    save() drops them. Versionless legacy keys make no compiler claim and
+    are kept (they still warm-start via the fallback chain)."""
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "tuned.json")
+        reg = TunedRegistry(max_idle_saves=None)
+        reg.put("k", {}, "cpu:x:jax0.1-jaxlib0.1", {"unroll": 8}, 0.1)
+        reg.put("k", {}, f"cpu:x:{compiler_version()}", {"unroll": 4}, 0.1)
+        reg.put("k", {}, "cpu:x", {"unroll": 2}, 0.1)        # legacy layout
+        reg.save(path)
+        loaded = TunedRegistry.load(path)
+        assert len(loaded) == 2
+        assert loaded.get("k", {}, "cpu:x:jax0.1-jaxlib0.1") is None
+        assert loaded.get("k", {}, f"cpu:x:{compiler_version()}") is not None
+        assert loaded.get("k", {}, "cpu:x") is not None
+
+
+def test_registry_aging_disabled_keeps_idle_entries():
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "tuned.json")
+        reg = TunedRegistry(max_idle_saves=None)
+        reg.put("k", {}, "test:v", {"unroll": 8}, 0.1)
+        for _ in range(50):
+            reg.save(path)
+        assert len(TunedRegistry.load(path)) == 1
+
+
+def test_registry_pre_aging_file_loads_as_freshly_used():
+    """Files written before aging existed (no stamps, no meta) must not
+    be instantly compacted on the next save."""
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "tuned.json")
+        import json as _json
+        with open(path, "w") as f:
+            _json.dump({TunedRegistry.key("k", {}, "test:v"):
+                        {"point": {"unroll": 8}, "score_s": 0.1}}, f)
+        reg = TunedRegistry.load(path)
+        assert reg.get("k", {}, "test:v") == {"unroll": 8}
+        reg.save(path)                             # one save: still fresh
+        assert len(TunedRegistry.load(path)) == 1
+
+
 def test_registry_records_strategy_provenance():
     with tempfile.TemporaryDirectory() as d:
         path = os.path.join(d, "tuned.json")

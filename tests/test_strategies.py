@@ -151,6 +151,75 @@ def test_warm_start_seed_is_proposed_first(strategy):
     assert strat.next_point() == seed_pt
 
 
+# ------------------------------------------------- parity: peek / propose
+@pytest.mark.parametrize("strategy", ALL_STRATEGIES)
+def test_peek_matches_subsequent_proposals(strategy):
+    """peek(n) is idempotent and, absent intervening reports, returns
+    exactly the points next_point() will yield, in order."""
+    strat = make_strategy(strategy, small_space())
+    ahead = strat.peek(3)
+    assert len(ahead) == 3
+    assert strat.peek(3) == ahead                 # idempotent
+    assert strat.peek(2) == ahead[:2]             # prefix-consistent
+    assert [strat.next_point() for _ in range(3)] == ahead
+    # peeking never double-counts proposals
+    assert strat.state.n_proposed == 3
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31))
+@pytest.mark.parametrize("strategy", ALL_STRATEGIES)
+def test_peek_preserves_dedup_and_coverage(strategy, seed):
+    """Randomly interleaving peeks with propose/report cycles must not
+    break the core contract: no point proposed twice, no hole proposed,
+    and exhaustive strategies still cover the space."""
+    import random
+
+    rng = random.Random(seed)
+    sp = small_space()
+    valid = {sp.key(p) for p in sp.iter_valid()}
+    strat = make_strategy(strategy, sp)
+    seen = []
+    while True:
+        if rng.random() < 0.5:
+            strat.peek(rng.randint(1, 4))
+        pt = strat.next_point()
+        if pt is None:
+            break
+        key = sp.key(pt)
+        assert key not in seen, (strategy, pt)
+        assert key in valid
+        seen.append(key)
+        strat.report(pt, rng.random())
+    assert strat.finished
+    if strategy in ("random", "greedy"):
+        assert set(seen) == valid
+
+
+@pytest.mark.parametrize("strategy", ALL_STRATEGIES)
+def test_peek_past_exhaustion_does_not_finish_strategy(strategy):
+    """Peeking beyond the end returns what is left WITHOUT marking the
+    strategy finished: buffered points are still pending proposal."""
+    sp = small_space(with_phase2=False)           # 4 valid points
+    strat = make_strategy(strategy, sp)
+    ahead = strat.peek(100)
+    assert 1 <= len(ahead) <= 4
+    assert not strat.finished
+    served = []
+    while True:
+        pt = strat.next_point()
+        if pt is None:
+            break
+        served.append(pt)
+        strat.report(pt, 1.0)
+    # every peeked point was eventually proposed (two_phase may re-scan
+    # more after reports; the peeked prefix must be served regardless)
+    for p in ahead:
+        assert p in served
+    assert strat.finished
+    assert strat.peek(2) == []                    # finished: nothing ahead
+
+
 # ------------------------------------------------- parity: budget respect
 @pytest.mark.parametrize("strategy", ALL_STRATEGIES)
 def test_strategy_respects_budget_gate(strategy):
