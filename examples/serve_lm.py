@@ -20,6 +20,7 @@ import jax.numpy as jnp
 
 from repro.configs import REGISTRY
 from repro.core import available_strategies
+from repro.runtime.kernel_plane import parse_kernel_strategies
 from repro.runtime.serve_loop import (
     ServeConfig, generate, make_serve_coordinator)
 
@@ -41,14 +42,27 @@ def main() -> None:
                     help="pow2-bucket seq/max_len tuner keys (default)")
     ap.add_argument("--no-seq-buckets", dest="seq_buckets",
                     action="store_false")
+    ap.add_argument("--kernel-tuning", default="program",
+                    choices=["off", "program", "kernel", "both"],
+                    help="tune whole step-programs, individual Pallas "
+                         "kernels, or both levels hierarchically")
+    ap.add_argument("--kernel-strategy", action="append", default=[],
+                    metavar="KERNEL=STRATEGY",
+                    help="per-kernel search strategy (repeatable), "
+                         "e.g. matmul=greedy")
     args = ap.parse_args()
+
+    kernel_strategies = parse_kernel_strategies(args.kernel_strategy)
 
     cfg = REGISTRY[args.arch].reduced()
     serve = ServeConfig(max_new_tokens=args.tokens, autotune=args.autotune,
                         tune_max_overhead=0.2, registry_path=args.registry,
                         tune_strategy=args.strategy,
-                        seq_buckets=args.seq_buckets)
-    coordinator = make_serve_coordinator(serve) if args.autotune else None
+                        seq_buckets=args.seq_buckets,
+                        kernel_tuning=args.kernel_tuning,
+                        kernel_strategies=kernel_strategies)
+    tuning_on = args.autotune and args.kernel_tuning != "off"
+    coordinator = make_serve_coordinator(serve) if tuning_on else None
 
     for req in range(args.requests):
         batch = {
@@ -71,16 +85,24 @@ def main() -> None:
               f"decode {out['decode_s']*1e3:.0f} ms   "
               f"{out['decode_tokens_per_s']:.1f} tok/s   "
               f"total {time.perf_counter()-t0:.1f}s")
-        if args.autotune:
+        if tuning_on:
             a = out["autotune"]
             lc = a["lifecycle"]
-            print(f"  tuning[{args.strategy}]: "
+            print(f"  tuning[{args.strategy}/{args.kernel_tuning}]: "
                   f"{a['regenerations']} regens {a['swaps']} swaps "
                   f"overhead {a['overhead_frac']*100:.1f}% "
                   f"(budget {a['budget_s']*1e3:.0f} ms, "
                   f"init {a['init_spent_s']*1e3:.0f} ms) "
                   f"tuners {a['n_kernels']} "
                   f"({lc['converged']} converged {lc['retired']} retired)")
+            if args.kernel_tuning in ("kernel", "both"):
+                for name, k in sorted(a["kernels"].items()):
+                    if not k.get("plane_managed"):
+                        continue
+                    print(f"    kernel {name}: {k['strategy']} "
+                          f"{k['regenerations']} regens "
+                          f"gen {k['gen_spent_s']*1e3:.1f} ms "
+                          f"eval {k['eval_spent_s']*1e3:.1f} ms")
     if args.requests > 0:
         print("first sequence:", out["tokens"][0].tolist())
 

@@ -13,6 +13,7 @@ from repro.core.compilette import (
 )
 from repro.core.decision import (
     LatencyHeadroomGate,
+    LatencyHistogram,
     RegenerationPolicy,
     TuningAccounts,
 )
@@ -60,6 +61,7 @@ __all__ = [
     "GenerationCache",
     "GenerationTicket",
     "LatencyHeadroomGate",
+    "LatencyHistogram",
     "RegenerationPolicy",
     "TuningAccounts",
     "Evaluator",

@@ -41,7 +41,11 @@ from repro.core.compilette import (
     GeneratedKernel,
     GenerationTicket,
 )
-from repro.core.decision import RegenerationPolicy, TuningAccounts
+from repro.core.decision import (
+    LatencyHistogram,
+    RegenerationPolicy,
+    TuningAccounts,
+)
 from repro.core.evaluator import Measurement
 from repro.core.explorer import SearchStrategy, make_strategy
 from repro.core.tuning_space import Point
@@ -91,8 +95,12 @@ class OnlineAutotuner:
         self._generator = generator
         self._pending: GenerationTicket | None = None
         # EWMA of real per-call latency (fed by ManagedTuner.__call__ via
-        # observe_latency); None until the first observation.
+        # observe_latency); None until the first observation. The
+        # histogram beside it estimates the tail: when the policy's
+        # headroom gate declares an slo_quantile, the gate reads
+        # quantile(slo_quantile) instead of the EWMA.
         self._latency_ewma: float | None = None
+        self._latency_hist = LatencyHistogram()
         # `explorer` (a pre-built instance) wins over `strategy` (a registry
         # name or instance); both default to the paper's two-phase order.
         self.explorer = explorer or make_strategy(
@@ -180,7 +188,7 @@ class OnlineAutotuner:
             else self._active_life.score_s)
 
     def observe_latency(self, call_s: float, alpha: float = 0.2) -> None:
-        """Feed one real per-call latency into the EWMA estimate."""
+        """Feed one real per-call latency into the EWMA + tail estimates."""
         if call_s < 0:
             return
         if self._latency_ewma is None:
@@ -190,6 +198,10 @@ class OnlineAutotuner:
         # write through: the headroom gate must see fresh telemetry even
         # between _update_gains passes
         self.accounts.observed_call_s = self._latency_ewma
+        self._latency_hist.observe(call_s)
+        q = getattr(self.policy.headroom, "slo_quantile", None)
+        if q is not None:
+            self.accounts.observed_tail_s = self._latency_hist.quantile(q)
 
     # ------------------------------------------------------------ wake-up
     @property

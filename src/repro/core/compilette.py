@@ -39,6 +39,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import itertools
 import queue
 import threading
 import time
@@ -75,15 +76,27 @@ class GenerationCache:
     kept in LRU order; ``max_entries`` bounds residency (compiled XLA
     executables pin device memory), ``None`` means unbounded.
 
+    **Cost-weighted eviction.** Entries are not equally expensive to get
+    back: one attention step-program costs orders of magnitude more to
+    recompile than a trivial rmsnorm variant, yet a pure LRU would let
+    ten cheap variants displace it. Every entry records its
+    ``generation_time_s``; when the cache overflows, the victim is the
+    *cheapest-to-regenerate* entry among the ``evict_window`` least
+    recently used (ties break toward the older entry, so equal-cost
+    entries degrade to plain LRU). The window keeps the policy local:
+    recently used entries are never sacrificed however cheap they are.
+
     Thread-safe: the coordinator's tuning thread, the async compile
     worker, and the application thread may all hit it concurrently.
     """
 
-    def __init__(self, max_entries: int | None = None) -> None:
+    def __init__(self, max_entries: int | None = None,
+                 evict_window: int = 8) -> None:
         self._table: "collections.OrderedDict[tuple, GeneratedKernel]" = (
             collections.OrderedDict())
         self._mu = threading.Lock()
         self.max_entries = max_entries
+        self.evict_window = max(int(evict_window), 1)
         self.hits = 0
         self.misses = 0
         self.evictions = 0
@@ -109,13 +122,32 @@ class GenerationCache:
             self.hits += 1
             return kern
 
+    @staticmethod
+    def _regen_cost(kern: GeneratedKernel) -> float:
+        """What evicting this entry would cost to recompile later."""
+        return float(kern.meta.get("compiled_in_s", kern.generation_time_s))
+
     def put(self, key: tuple, kern: GeneratedKernel) -> None:
         with self._mu:
             self._table[key] = kern
             self._table.move_to_end(key)
             while (self.max_entries is not None
                    and len(self._table) > self.max_entries):
-                self._table.popitem(last=False)
+                if len(self._table) == 1:
+                    # max_entries=0 (caching disabled): nothing can stay
+                    self._table.popitem(last=False)
+                    self.evictions += 1
+                    continue
+                # cheapest-to-regenerate among the LRU window; min() keeps
+                # the first (= least recently used) entry on cost ties.
+                # The window never reaches the newest entry (cap at
+                # len-1), so a fresh expensive compile cannot evict itself
+                # the moment it lands.
+                window = itertools.islice(
+                    self._table.items(),
+                    min(self.evict_window, len(self._table) - 1))
+                victim, _ = min(window, key=lambda kv: self._regen_cost(kv[1]))
+                del self._table[victim]
                 self.evictions += 1
 
     def __len__(self) -> int:

@@ -33,6 +33,69 @@ Serving extensions (the paper tunes a busy batch process; a server idles):
 from __future__ import annotations
 
 import dataclasses
+import math
+
+
+class LatencyHistogram:
+    """Fixed-bucket log-latency histogram for tail (p99) estimation.
+
+    The PR-3 EWMA answers "what does a typical call cost?"; an SLO is a
+    statement about the *tail*, so the headroom gate needs a quantile
+    estimate. Buckets are geometric (``buckets_per_decade`` per 10x), so
+    the memory footprint is fixed (~one small int array) regardless of
+    sample count, and a quantile is exact up to one bucket's relative
+    width (~15% at the default 16 buckets/decade) — plenty for a gate
+    whose threshold is a fraction of the SLO.
+    """
+
+    def __init__(
+        self,
+        lo_s: float = 1e-7,
+        hi_s: float = 1e3,
+        buckets_per_decade: int = 16,
+    ) -> None:
+        if not (0 < lo_s < hi_s):
+            raise ValueError(f"need 0 < lo_s < hi_s, got {lo_s}, {hi_s}")
+        self.lo_s = float(lo_s)
+        self.buckets_per_decade = int(buckets_per_decade)
+        decades = math.log10(hi_s / lo_s)
+        # + 2: one underflow bucket (index 0) and one overflow bucket
+        self._n = int(math.ceil(decades * self.buckets_per_decade)) + 2
+        self._counts = [0] * self._n
+        self.count = 0
+
+    def _index(self, s: float) -> int:
+        if s <= self.lo_s:
+            return 0
+        i = 1 + int(math.log10(s / self.lo_s) * self.buckets_per_decade)
+        return min(i, self._n - 1)
+
+    def _bucket_value(self, i: int) -> float:
+        """Geometric midpoint of bucket ``i`` (its representative value)."""
+        if i <= 0:
+            return self.lo_s
+        r = 10.0 ** (1.0 / self.buckets_per_decade)
+        return self.lo_s * r ** (i - 0.5)
+
+    def observe(self, s: float) -> None:
+        if s < 0:
+            return
+        self._counts[self._index(s)] += 1
+        self.count += 1
+
+    def quantile(self, q: float) -> float:
+        """Latency at quantile ``q`` (0 < q <= 1); 0.0 with no samples."""
+        if not 0.0 < q <= 1.0:
+            raise ValueError(f"quantile must be in (0, 1], got {q}")
+        if self.count == 0:
+            return 0.0
+        rank = q * self.count
+        seen = 0
+        for i, c in enumerate(self._counts):
+            seen += c
+            if seen >= rank:
+                return self._bucket_value(i)
+        return self._bucket_value(self._n - 1)
 
 
 @dataclasses.dataclass
@@ -63,6 +126,11 @@ class TuningAccounts:
                                         # coordinator-managed (ManagedTuner
                                         # times every call), else the
                                         # active kernel's measured score
+    observed_tail_s: float = 0.0        # tail (histogram-quantile) per-call
+                                        # latency at the headroom gate's
+                                        # slo_quantile; 0 until samples
+                                        # exist. Read instead of the EWMA
+                                        # by quantile-configured gates.
     kernel_calls: int = 0               # invocation counter (instrumentation)
     regenerations: int = 0              # variants generated+evaluated
     swaps: int = 0                      # active-function replacements
@@ -78,10 +146,18 @@ class LatencyHeadroomGate:
     headroom AND the next generate+evaluate cycle is estimated to fit in
     that headroom — so tuning never lands on a request that is already
     close to its SLO.
+
+    ``slo_quantile`` makes the gate tail-aware: instead of the per-call
+    EWMA it reads the :class:`LatencyHistogram` quantile recorded in
+    ``accounts.observed_tail_s`` (e.g. ``slo_quantile=0.99`` gates on
+    p99), so a kernel whose *mean* is comfortable but whose tail already
+    grazes the SLO is frozen — and an isolated mean-inflating outlier in
+    an otherwise-tight tail is not double counted.
     """
 
     slo_s: float
     min_headroom_frac: float = 0.25
+    slo_quantile: float | None = None   # e.g. 0.99: gate on tail latency
 
     def allows(
         self, observed_call_s: float, next_cost_estimate_s: float
@@ -135,10 +211,17 @@ class RegenerationPolicy:
         Headroom is a property of ONE kernel's latency, so multi-kernel
         schedulers must gate on the candidate kernel's accounts (not an
         aggregate: the max over kernels would let a slow prefill veto
-        tuning of a fast decode forever).
+        tuning of a fast decode forever). A quantile-configured gate
+        reads the tail estimate (``observed_tail_s``) and falls back to
+        the EWMA until the histogram has samples.
         """
-        return self.headroom is None or self.headroom.allows(
-            accounts.observed_call_s, next_cost_estimate_s)
+        if self.headroom is None:
+            return True
+        observed = accounts.observed_call_s
+        if (self.headroom.slo_quantile is not None
+                and accounts.observed_tail_s > 0.0):
+            observed = accounts.observed_tail_s
+        return self.headroom.allows(observed, next_cost_estimate_s)
 
     def budget_allows(
         self,

@@ -101,6 +101,16 @@ class SearchStrategy:
         for k, v in dict(base_point or {}).items():
             if k in base:
                 base[k] = v
+        if not space.is_valid(base):
+            # The pre-profiled default (or a merged stale point) can be a
+            # hole for small problem shapes — e.g. every block_k option
+            # exceeding K. Fall back to the first valid point so the
+            # reference variant is always generatable; a genuinely empty
+            # space keeps the invalid base (exploration proposes nothing
+            # and callers can detect it up front).
+            fallback = next(iter(space.iter_valid()), None)
+            if fallback is not None:
+                base = fallback
         self.base_point: Point = base
         self.state = ExplorerState()
         self.best_point: Point | None = None

@@ -1,3 +1,20 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+# Compute hot-spot kernels (paper's tuned units) + the kernel catalog.
+# Each <name>/ops.py exposes a declarative KERNEL (KernelDef); the
+# catalog discovers them and builds coordinator-ready KernelCompilettes.
+# See repro/kernels/catalog.py for the ~20-line recipe to add one.
+
+from repro.kernels.catalog import (
+    KernelCatalog,
+    KernelCompilette,
+    KernelDef,
+    discover_kernels,
+    get_catalog,
+)
+
+__all__ = [
+    "KernelCatalog",
+    "KernelCompilette",
+    "KernelDef",
+    "discover_kernels",
+    "get_catalog",
+]

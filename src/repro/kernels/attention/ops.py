@@ -22,6 +22,7 @@ from repro.core.profiles import TPU_V5E, DeviceProfile
 from repro.core.tuning_space import Param, Point, TuningSpace
 from repro.kernels.attention.attention import flash_attention_pallas
 from repro.kernels.attention.ref import attention_ref
+from repro.kernels.catalog import KernelDef
 
 NEG_INF = -1e30
 
@@ -298,8 +299,56 @@ def make_attention_compilette(
     return Compilette("attention", space, generate, cost_model=cost_model)
 
 
+# ---------------------------------------------------------- kernel catalog
+def _catalog_generate(point: Point, spec: dict[str, Any], *,
+                      interpret: bool = True):
+    causal = bool(spec.get("causal", True))
+
+    @jax.jit
+    def fn(q, k, v):
+        return flash_attention_pallas(q, k, v, point, causal=causal,
+                                      interpret=interpret)
+    return fn
+
+
+def _extract_spec(q, k, v, **overrides: Any) -> dict[str, Any]:
+    B, Tq, H, Dh = q.shape
+    _, Tkv, Hk, _ = k.shape
+    return {"B": int(B), "Tq": int(Tq), "Tkv": int(Tkv), "H": int(H),
+            "Hk": int(Hk), "Dh": int(Dh), "causal": True,
+            "dtype": str(q.dtype), **overrides}
+
+
+def _shapes(spec: dict[str, Any]):
+    dt = spec.get("dtype", "float32")
+    q = (spec["B"], spec["Tq"], spec["H"], spec["Dh"])
+    kv = (spec["B"], spec["Tkv"], spec["Hk"], spec["Dh"])
+    return ((q, dt), (kv, dt), (kv, dt))
+
+
+def _abstract_args(spec: dict[str, Any]) -> tuple:
+    return tuple(jax.ShapeDtypeStruct(s, d) for s, d in _shapes(spec))
+
+
+def _example_args(spec: dict[str, Any]) -> tuple:
+    return tuple(jnp.ones(s, d) * 0.1 for s, d in _shapes(spec))
+
+
+KERNEL = KernelDef(
+    name="attention",
+    make_space=lambda spec: make_space(spec["Tq"], spec["Tkv"], spec["Dh"]),
+    generate=_catalog_generate,
+    cost_model=attention_cost_model,
+    extract_spec=_extract_spec,
+    abstract_args=_abstract_args,
+    example_args=_example_args,
+    default_point=DEFAULT_POINT,
+)
+
+
 __all__ = [
     "DEFAULT_POINT",
+    "KERNEL",
     "flash_attention_jnp",
     "flash_attention_pallas",
     "decode_attention",

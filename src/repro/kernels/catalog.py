@@ -1,0 +1,268 @@
+"""Kernel catalog: the kernel-granular tuning plane's registry.
+
+The paper's unit of analysis is the individual short-running kernel, and
+the coordinator built in PRs 1–3 is the unit of *management* — this
+module makes them meet. Every op module under ``repro/kernels/*/ops.py``
+exposes a declarative :class:`KernelDef`; the process-wide
+:class:`KernelCatalog` discovers them and builds
+:class:`KernelCompilette`\\ s — coordinator-ready generators that know how
+to extract their tuning *spec* (the run-time constants: problem shape,
+dtype) from live call arguments, how to AOT-compile a variant so the real
+XLA compile cost lands in ``gen_spent_s`` (where the async pipeline hides
+it), and how to price themselves on a simulated device profile for
+deterministic virtual-clock tests.
+
+**Adding a new tunable kernel is ~20 lines** in your ``ops.py``::
+
+    from repro.kernels.catalog import KernelDef
+    import jax, jax.numpy as jnp
+
+    def _generate(point, spec, *, interpret=True):
+        # close over the point: this is the deGoal specialization analogue
+        @jax.jit
+        def fn(x):
+            return my_kernel(x, point, interpret=interpret)
+        return fn
+
+    KERNEL = KernelDef(
+        name="mykernel",
+        make_space=lambda spec: make_space(spec["N"]),     # reuse yours
+        generate=_generate,
+        cost_model=my_cost_model,                          # optional
+        extract_spec=lambda x, **kw: {"N": x.shape[0],
+                                      "dtype": str(x.dtype), **kw},
+        abstract_args=lambda spec: (jax.ShapeDtypeStruct(
+            (spec["N"],), spec["dtype"]),),
+        example_args=lambda spec: (jnp.ones((spec["N"],),
+                                            spec["dtype"]),),
+    )
+
+Nothing else: ``discover_kernels()`` imports every ``kernels/*/ops.py``
+and registers the ``KERNEL`` attribute it finds, the
+:class:`~repro.runtime.kernel_plane.KernelTuningPlane` registers built
+compilettes with the :class:`~repro.runtime.coordinator.TuningCoordinator`
+(own strategy, registry warm-start key, generation-cache entries and
+lifecycle bucketing per kernel), and the serve/train CLIs' ``--kernel-
+tuning`` / ``--kernel-strategy`` flags pick the kernel up by name.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+import os
+from typing import Any, Callable, Mapping
+
+from repro.core.compilette import Compilette
+from repro.core.profiles import DeviceProfile
+from repro.core.tuning_space import Point, TuningSpace
+
+__all__ = [
+    "KernelDef",
+    "KernelCompilette",
+    "KernelCatalog",
+    "discover_kernels",
+    "get_catalog",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelDef:
+    """Declarative description of one tunable kernel.
+
+    ``generate(point, spec, *, interpret)`` must return the concrete
+    callable for that tuning point with the spec's run-time constants
+    closed over; ``extract_spec(*call_args, **overrides)`` maps live
+    arguments (shapes/dtypes) to the spec dict that keys tuners, registry
+    entries and generation-cache lines; ``abstract_args(spec)`` /
+    ``example_args(spec)`` rebuild AOT avals / concrete evaluation
+    arguments from a spec alone.
+    """
+
+    name: str
+    make_space: Callable[[Mapping[str, Any]], TuningSpace]
+    generate: Callable[..., Callable[..., Any]]
+    extract_spec: Callable[..., dict[str, Any]]
+    cost_model: Callable[
+        [Point, Mapping[str, Any], DeviceProfile], float] | None = None
+    abstract_args: Callable[[Mapping[str, Any]], tuple] | None = None
+    example_args: Callable[[Mapping[str, Any]], tuple] | None = None
+    default_point: Point | None = None
+
+
+class KernelCompilette(Compilette):
+    """A :class:`~repro.core.Compilette` bound to one kernel spec.
+
+    Three generation backends, chosen at build time:
+
+    * **AOT** (default, real backend): the variant is lowered and
+      compiled inside ``_generate`` — ``jit(fn).lower(*avals).compile()``
+      — so the *actual XLA compile cost* is measured into
+      ``generation_time_s`` (and thus ``gen_spent_s``) instead of
+      polluting the first evaluation. Version-guarded: any lowering
+      failure falls back to the lazy ``jax.jit`` wrapper
+      (``aot_fallbacks`` counts them).
+    * **lazy** (``aot=False``): the paper-faithful behaviour before this
+      PR — generation returns the un-lowered jit wrapper and the first
+      evaluation pays the compile.
+    * **virtual** (``virtual=(clock, profile)``): generation returns a
+      simulated kernel whose calls advance the injected
+      :class:`~repro.core.VirtualClock` by the analytical
+      ``cost_model`` estimate — the deterministic backend the tier-1
+      kernel-plane tests and ``benchmarks/kernel_plane.py`` run on.
+    """
+
+    def __init__(
+        self,
+        defn: KernelDef,
+        spec: Mapping[str, Any],
+        *,
+        interpret: bool = True,
+        aot: bool = True,
+        virtual: "tuple[Any, DeviceProfile] | None" = None,
+        gen_cost_s: "float | Callable[..., float] | None" = None,
+        cache_token: str | None = None,
+    ) -> None:
+        self.defn = defn
+        self.spec = dict(spec)
+        self.interpret = interpret
+        self.aot = bool(aot) and virtual is None
+        self.virtual = virtual
+        self.aot_compiles = 0
+        self.aot_fallbacks = 0
+
+        cost_model = None
+        if defn.cost_model is not None:
+            def cost_model(point, sp, profile, _d=defn):
+                return _d.cost_model(point, {**self.spec, **sp}, profile)
+
+        super().__init__(
+            defn.name,
+            defn.make_space(self.spec),
+            self._build,
+            cost_model=cost_model,
+            gen_cost_s=gen_cost_s,
+            cache_token=cache_token,
+        )
+
+    # ------------------------------------------------------------ generate
+    def _build(self, point: Point, **sp: Any) -> Callable[..., Any]:
+        spec = {**self.spec, **sp}
+        if self.virtual is not None:
+            clock, profile = self.virtual
+            if self.defn.cost_model is None:
+                raise ValueError(
+                    f"kernel {self.name!r} has no cost model: cannot "
+                    "generate virtual variants")
+            from repro.core.evaluator import virtual_kernel
+            return virtual_kernel(
+                clock, self.defn.cost_model(dict(point), spec, profile),
+                tag=dict(point))
+        fn = self.defn.generate(dict(point), spec, interpret=self.interpret)
+        if self.aot and self.defn.abstract_args is not None:
+            fn = self._aot_compile(fn, spec)
+        return fn
+
+    def _aot_compile(self, fn: Callable[..., Any],
+                     spec: Mapping[str, Any]) -> Callable[..., Any]:
+        try:
+            import jax
+
+            jitted = fn if hasattr(fn, "lower") else jax.jit(fn)
+            compiled = jitted.lower(*self.defn.abstract_args(spec)).compile()
+            self.aot_compiles += 1
+            return compiled
+        except Exception:
+            # older jax without the AOT API, or a backend that refuses to
+            # lower this program ahead of time: degrade to the lazy
+            # wrapper (first evaluation pays the compile, as before)
+            self.aot_fallbacks += 1
+            return fn
+
+    # ------------------------------------------------------------- helpers
+    def has_valid_points(self) -> bool:
+        """False when every point is a hole at this spec (untunable shape)."""
+        return next(iter(self.space.iter_valid()), None) is not None
+
+    def abstract_call_args(self) -> tuple:
+        if self.defn.abstract_args is None:
+            raise ValueError(f"kernel {self.name!r} declares no abstract args")
+        return self.defn.abstract_args(self.spec)
+
+    def example_call_args(self) -> tuple:
+        """Concrete arrays of the spec's shapes (evaluation fallback)."""
+        if self.defn.example_args is None:
+            raise ValueError(f"kernel {self.name!r} declares no example args")
+        return self.defn.example_args(self.spec)
+
+
+class KernelCatalog:
+    """Name → :class:`KernelDef` registry (one per process)."""
+
+    def __init__(self) -> None:
+        self._defs: dict[str, KernelDef] = {}
+
+    def register(self, defn: KernelDef) -> KernelDef:
+        self._defs[defn.name] = defn
+        return defn
+
+    def names(self) -> tuple[str, ...]:
+        return tuple(sorted(self._defs))
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._defs
+
+    def get(self, name: str) -> KernelDef:
+        try:
+            return self._defs[name]
+        except KeyError:
+            raise KeyError(
+                f"unknown kernel {name!r}; discovered: "
+                f"{', '.join(self.names()) or '(none)'}") from None
+
+    def spec_of(self, name: str, *args: Any, **overrides: Any) -> dict:
+        return self.get(name).extract_spec(*args, **overrides)
+
+    def compilette(self, name: str, spec: Mapping[str, Any],
+                   **opts: Any) -> KernelCompilette:
+        return KernelCompilette(self.get(name), spec, **opts)
+
+
+_CATALOG = KernelCatalog()
+_DISCOVERED = False
+
+
+def discover_kernels(catalog: KernelCatalog | None = None) -> KernelCatalog:
+    """Import every ``repro.kernels.<pkg>.ops`` and register its KERNEL.
+
+    Idempotent; op packages without an ``ops`` module or a ``KERNEL``
+    attribute are skipped silently (the kernels layer is optional). The
+    scan walks the package path directly (the op directories are PEP-420
+    namespace packages, which ``pkgutil.iter_modules`` does not list).
+    """
+    catalog = catalog if catalog is not None else _CATALOG
+    import repro.kernels as pkg
+
+    names: set[str] = set()
+    for root in pkg.__path__:
+        for entry in sorted(os.listdir(root)):
+            if os.path.isfile(os.path.join(root, entry, "ops.py")):
+                names.add(entry)
+    for name in sorted(names):
+        try:
+            mod = importlib.import_module(f"repro.kernels.{name}.ops")
+        except ImportError:
+            continue
+        defn = getattr(mod, "KERNEL", None)
+        if isinstance(defn, KernelDef):
+            catalog.register(defn)
+    return catalog
+
+
+def get_catalog() -> KernelCatalog:
+    """The process-wide catalog, discovery run once on first use."""
+    global _DISCOVERED
+    if not _DISCOVERED:
+        discover_kernels(_CATALOG)
+        _DISCOVERED = True
+    return _CATALOG

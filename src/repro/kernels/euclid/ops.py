@@ -24,6 +24,7 @@ import jax.numpy as jnp
 from repro.core.compilette import Compilette
 from repro.core.profiles import TPU_V5E, DeviceProfile
 from repro.core.tuning_space import Param, Point, TuningSpace
+from repro.kernels.catalog import KernelDef
 from repro.kernels.euclid.euclid import euclid_pallas
 from repro.kernels.euclid.ref import euclid_ref
 
@@ -225,8 +226,47 @@ def reference_simd(dim: int):
     return fn
 
 
+# ---------------------------------------------------------- kernel catalog
+def _catalog_generate(point: Point, spec: dict[str, Any], *,
+                      interpret: bool = True):
+    return generate_jnp_variant(point, dim=spec["D"])
+
+
+def _extract_spec(x, c, **overrides: Any) -> dict[str, Any]:
+    N, D = x.shape
+    M, _ = c.shape
+    return {"N": int(N), "M": int(M), "D": int(D),
+            "dtype": str(x.dtype), **overrides}
+
+
+def _shapes(spec: dict[str, Any]):
+    dt = spec.get("dtype", "float32")
+    return (((spec["N"], spec["D"]), dt), ((spec["M"], spec["D"]), dt))
+
+
+def _abstract_args(spec: dict[str, Any]) -> tuple:
+    return tuple(jax.ShapeDtypeStruct(s, d) for s, d in _shapes(spec))
+
+
+def _example_args(spec: dict[str, Any]) -> tuple:
+    return tuple(jnp.ones(s, d) for s, d in _shapes(spec))
+
+
+KERNEL = KernelDef(
+    name="euclid",
+    make_space=lambda spec: make_space(spec["N"], spec["M"], spec["D"]),
+    generate=_catalog_generate,
+    cost_model=euclid_cost_model,
+    extract_spec=_extract_spec,
+    abstract_args=_abstract_args,
+    example_args=_example_args,
+    default_point=DEFAULT_POINT,
+)
+
+
 __all__ = [
     "DEFAULT_POINT",
+    "KERNEL",
     "make_space",
     "make_euclid_compilette",
     "generate_jnp_variant",

@@ -16,6 +16,7 @@ import jax.numpy as jnp
 from repro.core.compilette import Compilette
 from repro.core.profiles import TPU_V5E, DeviceProfile
 from repro.core.tuning_space import Param, Point, TuningSpace
+from repro.kernels.catalog import KernelDef
 from repro.kernels.lintra.lintra import lintra_pallas
 from repro.kernels.lintra.ref import lintra_ref, lintra_ref_folded
 
@@ -181,8 +182,49 @@ def reference_simd(bands: int, width: int):
     return fn
 
 
+# ---------------------------------------------------------- kernel catalog
+def _catalog_generate(point: Point, spec: dict[str, Any], *,
+                      interpret: bool = True):
+    # the jnp backend IS this container's real platform: XLA:CPU emits
+    # genuinely different machine code per point
+    return generate_jnp_variant(point, bands=spec["bands"], width=spec["W"])
+
+
+def _extract_spec(x, a, b, **overrides: Any) -> dict[str, Any]:
+    H, W, bands = x.shape
+    return {"H": int(H), "W": int(W), "bands": int(bands),
+            "dtype": str(x.dtype), **overrides}
+
+
+def _shapes(spec: dict[str, Any]):
+    dt = spec.get("dtype", "float32")
+    return (((spec["H"], spec["W"], spec["bands"]), dt),
+            ((spec["bands"],), dt), ((spec["bands"],), dt))
+
+
+def _abstract_args(spec: dict[str, Any]) -> tuple:
+    return tuple(jax.ShapeDtypeStruct(s, d) for s, d in _shapes(spec))
+
+
+def _example_args(spec: dict[str, Any]) -> tuple:
+    return tuple(jnp.ones(s, d) for s, d in _shapes(spec))
+
+
+KERNEL = KernelDef(
+    name="lintra",
+    make_space=lambda spec: make_space(spec["H"], spec["W"], spec["bands"]),
+    generate=_catalog_generate,
+    cost_model=lintra_cost_model,
+    extract_spec=_extract_spec,
+    abstract_args=_abstract_args,
+    example_args=_example_args,
+    default_point=DEFAULT_POINT,
+)
+
+
 __all__ = [
     "DEFAULT_POINT",
+    "KERNEL",
     "make_space",
     "make_lintra_compilette",
     "generate_jnp_variant",

@@ -15,6 +15,7 @@ import jax.numpy as jnp
 from repro.core.compilette import Compilette
 from repro.core.profiles import TPU_V5E, DeviceProfile
 from repro.core.tuning_space import Param, Point, TuningSpace
+from repro.kernels.catalog import KernelDef
 from repro.kernels.matmul.matmul import matmul_pallas
 from repro.kernels.matmul.ref import matmul_ref
 
@@ -30,11 +31,15 @@ def make_space(
     dtype_bytes: int = 4,
     vmem_kb: int = TPU_V5E.vmem_kb,
 ) -> TuningSpace:
+    # block_k options past K are all holes (validator: block_k > K), so a
+    # small-K problem would otherwise have an EMPTY space; keep the pow2
+    # options that fit and fall back to the exact extent when none do.
+    bk_options = tuple(v for v in (128, 256, 512) if v <= K) or (int(K),)
     params = (
         # phase 1 — structural (analogues: coldUF, vectLen, chunking, hotUF)
         Param("block_m", (64, 128, 256, 512), phase=1, switch_rank=0),
         Param("block_n", (128, 256, 512), phase=1, switch_rank=1),
-        Param("block_k", (128, 256, 512), phase=1, switch_rank=2),
+        Param("block_k", bk_options, phase=1, switch_rank=2),
         Param("unroll", (1, 2, 4), phase=1, switch_rank=3),
         # phase 2 — codegen options (IS, SM, pldStride analogues)
         Param("order", ("mn", "nm"), phase=2),
@@ -153,8 +158,67 @@ def tuned_matmul(a, b, *, point: Point | None = None, interpret: bool = True):
     return matmul_pallas(a, b, point, out_dtype=jnp.float32, interpret=interpret)
 
 
+# ---------------------------------------------------------- kernel catalog
+def _catalog_space(spec: dict[str, Any]) -> TuningSpace:
+    return make_space(
+        spec["M"], spec["N"], spec["K"],
+        dtype_bytes=jnp.dtype(spec.get("dtype", "float32")).itemsize)
+
+
+def _catalog_generate(point: Point, spec: dict[str, Any], *,
+                      interpret: bool = True):
+    import jax
+
+    @jax.jit
+    def fn(a, b):
+        return matmul_pallas(a, b, point, out_dtype=jnp.float32,
+                             interpret=interpret)
+    return fn
+
+
+def _catalog_cost(point: Point, spec: dict[str, Any], profile) -> float:
+    full = {"dtype_bytes": jnp.dtype(spec.get("dtype", "float32")).itemsize}
+    full.update(spec)
+    return matmul_cost_model(point, full, profile)
+
+
+def _extract_spec(a, b, **overrides: Any) -> dict[str, Any]:
+    M, K = a.shape
+    _, N = b.shape
+    return {"M": int(M), "N": int(N), "K": int(K),
+            "dtype": str(a.dtype), **overrides}
+
+
+def _shapes(spec: dict[str, Any]):
+    dt = spec.get("dtype", "float32")
+    return ((spec["M"], spec["K"]), dt), ((spec["K"], spec["N"]), dt)
+
+
+def _abstract_args(spec: dict[str, Any]) -> tuple:
+    import jax
+
+    return tuple(jax.ShapeDtypeStruct(s, d) for s, d in _shapes(spec))
+
+
+def _example_args(spec: dict[str, Any]) -> tuple:
+    return tuple(jnp.ones(s, d) for s, d in _shapes(spec))
+
+
+KERNEL = KernelDef(
+    name="matmul",
+    make_space=_catalog_space,
+    generate=_catalog_generate,
+    cost_model=_catalog_cost,
+    extract_spec=_extract_spec,
+    abstract_args=_abstract_args,
+    example_args=_example_args,
+    default_point=DEFAULT_POINT,
+)
+
+
 __all__ = [
     "DEFAULT_POINT",
+    "KERNEL",
     "make_space",
     "make_matmul_compilette",
     "matmul_cost_model",

@@ -7,9 +7,12 @@ from typing import Any
 
 import jax
 
+import jax.numpy as jnp
+
 from repro.core.compilette import Compilette
 from repro.core.profiles import TPU_V5E, DeviceProfile
 from repro.core.tuning_space import Param, Point, TuningSpace
+from repro.kernels.catalog import KernelDef
 from repro.kernels.rmsnorm.ref import rmsnorm_ref
 from repro.kernels.rmsnorm.rmsnorm import rmsnorm_pallas
 
@@ -70,5 +73,42 @@ def make_rmsnorm_compilette(N: int, d: int, *, interpret: bool = True,
     return Compilette("rmsnorm", space, generate, cost_model=cost_model)
 
 
-__all__ = ["DEFAULT_POINT", "make_space", "make_rmsnorm_compilette",
+# ---------------------------------------------------------- kernel catalog
+def _catalog_generate(point: Point, spec: dict[str, Any], *,
+                      interpret: bool = True):
+    @jax.jit
+    def fn(x, w):
+        return rmsnorm_pallas(x, w, point, interpret=interpret)
+    return fn
+
+
+def _extract_spec(x, w, **overrides: Any) -> dict[str, Any]:
+    N, d = x.shape
+    return {"N": int(N), "d": int(d), "dtype": str(x.dtype), **overrides}
+
+
+def _abstract_args(spec: dict[str, Any]) -> tuple:
+    dt = spec.get("dtype", "float32")
+    return (jax.ShapeDtypeStruct((spec["N"], spec["d"]), dt),
+            jax.ShapeDtypeStruct((spec["d"],), dt))
+
+
+def _example_args(spec: dict[str, Any]) -> tuple:
+    dt = spec.get("dtype", "float32")
+    return (jnp.ones((spec["N"], spec["d"]), dt), jnp.ones((spec["d"],), dt))
+
+
+KERNEL = KernelDef(
+    name="rmsnorm",
+    make_space=lambda spec: make_space(spec["N"], spec["d"]),
+    generate=_catalog_generate,
+    cost_model=rmsnorm_cost_model,
+    extract_spec=_extract_spec,
+    abstract_args=_abstract_args,
+    example_args=_example_args,
+    default_point=DEFAULT_POINT,
+)
+
+
+__all__ = ["DEFAULT_POINT", "KERNEL", "make_space", "make_rmsnorm_compilette",
            "rmsnorm_cost_model", "rmsnorm_pallas", "rmsnorm_ref"]

@@ -10,6 +10,16 @@ earlier ones discovered (and ``--registry`` persists them across restarts).
 ``--strategy`` picks the search strategy (two_phase/random/greedy/...),
 ``--seq-buckets/--no-seq-buckets`` controls power-of-two bucketing of the
 per-shape serve tuners.
+
+``--kernel-tuning`` selects the tuning granularity: ``program`` (whole
+step-programs, the pre-PR-4 behaviour), ``kernel`` (the model's matmul /
+attention / rmsnorm Pallas kernels tune as independent coordinator-managed
+compilettes), ``both`` (hierarchical: step-programs plus their constituent
+kernels under one shared budget) or ``off``. ``--kernel-strategy
+name=strategy`` (repeatable) assigns a search strategy per kernel, e.g.
+``--kernel-strategy matmul=greedy --kernel-strategy attention=random``.
+``--slo-quantile 0.99`` makes the latency-headroom gate tail-aware (gates
+on the log-histogram p99 instead of the per-call EWMA).
 """
 
 import argparse
@@ -42,6 +52,18 @@ def main() -> None:
     ap.add_argument("--slo", type=float, default=None,
                     help="per-step latency SLO in seconds "
                          "(headroom-gates tuning)")
+    ap.add_argument("--slo-quantile", type=float, default=None,
+                    help="gate on this latency quantile (e.g. 0.99 for "
+                         "p99) instead of the per-call EWMA; needs --slo")
+    ap.add_argument("--kernel-tuning", default="program",
+                    choices=["off", "program", "kernel", "both"],
+                    help="tuning granularity: whole step-programs, "
+                         "individual Pallas kernels, or both levels "
+                         "hierarchically under one shared budget")
+    ap.add_argument("--kernel-strategy", action="append", default=[],
+                    metavar="KERNEL=STRATEGY",
+                    help="per-kernel search strategy override "
+                         "(repeatable), e.g. matmul=greedy")
     ap.add_argument("--sync-generation", dest="async_generation",
                     action="store_false", default=True,
                     help="compile candidate variants inline on the "
@@ -50,6 +72,9 @@ def main() -> None:
     ap.add_argument("--prefetch", type=int, default=1,
                     help="speculative compiles per tuning slot (0=off)")
     args = ap.parse_args()
+    if args.slo_quantile is not None and args.slo is None:
+        ap.error("--slo-quantile has no effect without --slo (the "
+                 "headroom gate only exists when an SLO is set)")
 
     import jax
 
@@ -60,18 +85,27 @@ def main() -> None:
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
+    from repro.runtime.kernel_plane import parse_kernel_strategies
+
+    kernel_strategies = parse_kernel_strategies(args.kernel_strategy)
     serve = ServeConfig(
         max_new_tokens=args.tokens,
         autotune=args.autotune,
         tune_max_overhead=args.tune_overhead,
         tune_strategy=args.strategy,
         tune_slo_s=args.slo,
+        tune_slo_quantile=args.slo_quantile,
         seq_buckets=args.seq_buckets,
         registry_path=args.registry,
         async_generation=args.async_generation,
         prefetch=args.prefetch,
+        kernel_tuning=args.kernel_tuning,
+        kernel_strategies=kernel_strategies,
     )
-    coordinator = make_serve_coordinator(serve) if args.autotune else None
+    # kernel_tuning="off" disables tuning even with --autotune: no
+    # coordinator, and generate() emits no "autotune" stats block
+    tuning_on = args.autotune and args.kernel_tuning != "off"
+    coordinator = make_serve_coordinator(serve) if tuning_on else None
 
     for req in range(args.requests):
         batch = {"tokens": jax.random.randint(
@@ -87,11 +121,11 @@ def main() -> None:
         out = generate(cfg, batch, serve, coordinator=coordinator)
         line = (f"req {req}: {out['decode_tokens_per_s']:.1f} tok/s, "
                 f"prefill {out['prefill_s']*1e3:.0f} ms")
-        if args.autotune:
+        if tuning_on:
             a = out["autotune"]
             lc = a["lifecycle"]
             gc = a["generation_cache"]
-            line += (f"  [tuning({args.strategy}): "
+            line += (f"  [tuning({args.strategy}/{args.kernel_tuning}): "
                      f"{a['regenerations']} regens, {a['swaps']} swaps, "
                      f"overhead {a['overhead_frac']*100:.1f}%, "
                      f"gen stall {a['gen_stall_s']*1e3:.0f} ms, "
@@ -99,6 +133,12 @@ def main() -> None:
                      f"tuners {a['n_kernels']} "
                      f"({lc['converged']} converged, "
                      f"{lc['retired']} retired)]")
+            if args.kernel_tuning in ("kernel", "both"):
+                per = ", ".join(
+                    f"{name}:{k['strategy']}×{k['regenerations']}"
+                    for name, k in sorted(a["kernels"].items())
+                    if k.get("plane_managed"))
+                line += f"\n        kernels: {per}"
         print(line)
 
 

@@ -16,10 +16,55 @@ from repro.configs.base import ModelConfig
 from repro.distributed.sharding import shard
 from repro.kernels.attention.ops import decode_attention, flash_attention_jnp
 from repro.models.params import ParamDef
+from repro.runtime.kernel_plane import active_plane
+
+
+# ------------------------------------------------------------ kernel plane
+def _plane_routes(*arrays: jax.Array):
+    """The active kernel-tuning plane, when these EAGER arrays can route.
+
+    Inside a jit trace the arguments are tracers: the coordinator-managed
+    handle (a python-level function-pointer swap) cannot run there, so
+    traced call sites instead adopt the plane's best-known points (see
+    :func:`plane_attn_chunks`) and keep the pure-jnp kernel body.
+    """
+    plane = active_plane()
+    if plane is None:
+        return None
+    if any(isinstance(a, jax.core.Tracer) for a in arrays):
+        return None
+    return plane
+
+
+def plane_attn_chunks(cfg: ModelConfig) -> tuple[int, int]:
+    """Attention chunk sizes: the plane's tuned blocks, else cfg defaults.
+
+    This is the trace-time half of kernel-granular tuning: a jitted
+    step-program generated while a plane is active inherits the
+    attention kernel's independently tuned ``block_q``/``block_kv``
+    instead of the config's hard-coded chunk sizes (warm-started
+    registries make this bite from the very first trace of a restarted
+    process).
+    """
+    plane = active_plane()
+    if plane is not None and plane.adopt_points:
+        best = plane.best_point("attention")
+        if best is not None:
+            return (int(best.get("block_q", cfg.attn_q_chunk)),
+                    int(best.get("block_kv", cfg.attn_k_chunk)))
+    return cfg.attn_q_chunk, cfg.attn_k_chunk
 
 
 # ----------------------------------------------------------------- norms
 def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    plane = _plane_routes(x, scale)
+    if plane is not None and eps == 1e-6 and x.ndim >= 2:
+        # coordinator-managed handle: the fused Pallas kernel tuned as an
+        # independent unit (block_rows its own space, own strategy)
+        shape = x.shape
+        y = plane.call("rmsnorm", x.reshape(-1, shape[-1]), scale)
+        if y is not None:
+            return y.reshape(shape)
     x32 = x.astype(jnp.float32)
     var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
     return (x32 * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(x.dtype)
@@ -147,11 +192,20 @@ def self_attention(
         pos2d = positions if positions.ndim == 2 else positions[None]
         q = apply_rope(q, pos2d, cfg.rope_theta)
         k = apply_rope(k, pos2d, cfg.rope_theta)
-    o = flash_attention_jnp(
-        q, k, v, causal=causal, q_offset=q_offset, window=cfg.window,
-        q_chunk=cfg.attn_q_chunk, k_chunk=cfg.attn_k_chunk,
-        scores_f32=cfg.attn_scores_f32,
-    )
+    plane = _plane_routes(q, k, v)
+    o = None
+    if (plane is not None and causal and q_offset == 0
+            and cfg.window is None):
+        # eager call with an active plane: the flash kernel runs as an
+        # independently tuned coordinator-managed unit
+        o = plane.call("attention", q, k, v)
+    if o is None:
+        qc, kc = plane_attn_chunks(cfg)
+        o = flash_attention_jnp(
+            q, k, v, causal=causal, q_offset=q_offset, window=cfg.window,
+            q_chunk=qc, k_chunk=kc,
+            scores_f32=cfg.attn_scores_f32,
+        )
     return attn_out(o, p, cfg)
 
 
@@ -171,9 +225,10 @@ def self_attention_with_cache(
         pos2d = positions if positions.ndim == 2 else positions[None]
         q = apply_rope(q, pos2d, cfg.rope_theta)
         k = apply_rope(k, pos2d, cfg.rope_theta)
+    qc, kc = plane_attn_chunks(cfg)
     o = flash_attention_jnp(
         q, k, v, causal=True, window=cfg.window,
-        q_chunk=cfg.attn_q_chunk, k_chunk=cfg.attn_k_chunk,
+        q_chunk=qc, k_chunk=kc,
         scores_f32=cfg.attn_scores_f32,
     )
     return attn_out(o, p, cfg), (k, v)

@@ -1,6 +1,8 @@
-"""Model dispatcher: config → model instance."""
+"""Model dispatcher: config → model instance; constituent-kernel specs."""
 
 from __future__ import annotations
+
+import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models.hymba import HymbaLM
@@ -22,3 +24,31 @@ def build_model(cfg: ModelConfig):
     if cfg.family == "encdec":
         return WhisperLM(cfg)
     raise ValueError(f"unknown model family {cfg.family!r}")
+
+
+def model_kernel_specs(
+    cfg: ModelConfig, *, batch: int, seq: int,
+) -> list[tuple[str, dict]]:
+    """Constituent tunable kernels of a model's step-programs.
+
+    The hierarchical-registration shape list: for a (batch, seq) traffic
+    cell, the step-programs decompose into these catalog kernels, each
+    registered as an independent coordinator-managed compilette (its own
+    tuning space, strategy, registry key and cache lines). The paper's
+    unit of analysis — the individual short-running kernel — keyed by
+    the run-time constants the model bakes into it.
+    """
+    dt = str(jnp.dtype(cfg.compute_dtype))
+    specs: list[tuple[str, dict]] = [
+        # pre-attention / pre-MLP norms run over the flattened tokens
+        ("rmsnorm", {"N": batch * seq, "d": cfg.d_model, "dtype": dt}),
+        # MLP up-projection: the model's hot matmul shape
+        ("matmul", {"M": batch * seq, "N": cfg.d_ff, "K": cfg.d_model,
+                    "dtype": dt}),
+    ]
+    if cfg.n_heads and cfg.d_head:
+        specs.append(
+            ("attention", {"B": batch, "Tq": seq, "Tkv": seq,
+                           "H": cfg.n_heads, "Hk": cfg.n_kv_heads,
+                           "Dh": cfg.d_head, "causal": True, "dtype": dt}))
+    return specs

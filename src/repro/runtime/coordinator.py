@@ -93,6 +93,10 @@ class ManagedTuner:
     state: TunerState = TunerState.ACTIVE
     last_used_s: float = 0.0
     calls_at_last_wake: int = 0
+    # set by the KernelTuningPlane: this tuner is an individual kernel
+    # compilette (vs a whole step-program); consumers (CLI reports) can
+    # split stats() entries without hard-coding step-program names
+    plane_managed: bool = False
 
     def __call__(self, *args: Any) -> Any:
         t0 = self.last_used_s = self.clock()
@@ -111,6 +115,7 @@ class ManagedTuner:
         out = self.tuner.stats()
         out["warm_started"] = self.warm_started
         out["state"] = self.state.value
+        out["plane_managed"] = self.plane_managed
         return out
 
 
@@ -198,6 +203,12 @@ class TuningCoordinator:
         # keep counting what they spent/gained after they unregister.
         self._retired_accounts = TuningAccounts()
         self._n_retired = 0
+        # Busy time observed OUTSIDE managed tuners (observe_busy): a
+        # kernel-granular serve process runs its step-programs unmanaged,
+        # yet that is exactly the useful work a busy-time budget should
+        # accrue from — without it, per-kernel tuning would be starved
+        # forever (managed kernels are evaluated, never "called").
+        self._external_busy_s = 0.0
         self._lock = threading.Lock()
         self._thread: threading.Thread | None = None
         self._stop = threading.Event()
@@ -280,6 +291,20 @@ class TuningCoordinator:
         for f in cls._ADDITIVE_FIELDS:
             setattr(dst, f, getattr(dst, f) + getattr(src, f))
         dst.observed_call_s = max(dst.observed_call_s, src.observed_call_s)
+        dst.observed_tail_s = max(dst.observed_tail_s, src.observed_tail_s)
+
+    def observe_busy(self, seconds: float) -> None:
+        """Credit useful work done outside any managed tuner.
+
+        Serving loops call this with the step-program time when the step
+        itself is NOT coordinator-managed (``kernel_tuning="kernel"``):
+        a ``budget_from="busy"`` policy then accrues budget from real
+        traffic exactly as it would had the step been a managed tuner.
+        Callers must not double-report work a ManagedTuner already
+        counts (its calls accrue ``busy_s`` via calls × score).
+        """
+        if seconds > 0:
+            self._external_busy_s += float(seconds)
 
     def _aggregate_accounts(self) -> TuningAccounts:
         agg = TuningAccounts(app_start_s=self.app_start_s)
@@ -287,6 +312,7 @@ class TuningCoordinator:
         for m in self._managed:
             m.tuner._update_gains()
             self._accumulate(agg, m.tuner.accounts)
+        agg.busy_s += self._external_busy_s
         return agg
 
     def _shared_budget_gate(
@@ -593,6 +619,15 @@ class TuningCoordinator:
                 "converged": sum(1 for m in self._managed
                                  if m.state is TunerState.CONVERGED),
                 "retired": self._n_retired,
+            },
+            # tombstone breakdown: per-kernel entries below only cover
+            # CURRENTLY managed tuners, so per-kernel sums + these retired
+            # totals reconcile exactly with the aggregate fields above
+            "retired_accounts": {
+                f: getattr(self._retired_accounts, f)
+                for f in ("tuning_spent_s", "gen_spent_s", "gen_stall_s",
+                          "eval_spent_s", "gained_s", "regenerations",
+                          "swaps")
             },
             "generation_cache": self.generation_cache.stats(),
             "generation": (self.generator.stats()

@@ -21,7 +21,17 @@ prefill, flash-decoding KV-chunk for decode — managed by the process-wide
     memoized in its process-wide :class:`GenerationCache`, so buckets
     re-registered after eviction or a restart warm-start never
     recompile) while the live step-programs keep serving — the paper's
-    double-buffered code generation, serving-grade.
+    double-buffered code generation, serving-grade;
+  * **hierarchical registration** (``kernel_tuning``): beside the whole
+    step-programs, the model's constituent Pallas kernels (matmul,
+    attention, rmsnorm) register as independent compilettes through the
+    :class:`~repro.runtime.kernel_plane.KernelTuningPlane` — each with
+    its own tuning space, search strategy (``kernel_strategies``),
+    registry warm-start key and generation-cache lines, all drawing
+    slots from the same shared budget. ``"program"`` is the pre-PR-4
+    behaviour, ``"kernel"`` tunes only the kernels (step-programs adopt
+    the kernels' best block sizes at trace time), ``"both"`` runs the
+    two levels together (program points own the step-level knobs).
 
 Pass a long-lived coordinator (one per serving process) so tuning state,
 budget and warm-started best points persist across requests; within a
@@ -30,6 +40,7 @@ single ``generate`` call tuning already begins between decode steps.
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
 from typing import Any
@@ -47,9 +58,12 @@ from repro.core import (
     clamped_options,
     product_space,
 )
-from repro.models.model import build_model
+from repro.models.model import build_model, model_kernel_specs
 from repro.runtime.coordinator import TuningCoordinator
+from repro.runtime.kernel_plane import KernelTuningPlane, use_kernel_plane
 from repro.runtime.lifecycle import TunerLifecycle
+
+KERNEL_TUNING_MODES = ("off", "program", "kernel", "both")
 
 
 @dataclasses.dataclass
@@ -64,12 +78,15 @@ class ServeConfig:
     tune_invest: float = 0.10
     tune_strategy: str = "two_phase"  # any repro.core.explorer registry name
     tune_slo_s: float | None = None   # per-step latency SLO (headroom gate)
+    tune_slo_quantile: float | None = None  # e.g. 0.99: gate on p99, not mean
     seq_buckets: bool = True          # pow2-bucket seq/max_len tuner keys
     idle_evict_s: float | None = 300.0  # retire tuners idle this long
     registry_path: str | None = None  # warm-start across server restarts
     pump_every: int = 4               # decode steps between tuning slots
     async_generation: bool = True     # compile variants off the hot path
     prefetch: int = 1                 # speculative compiles per slot (0=off)
+    kernel_tuning: str = "program"    # off | program | kernel | both
+    kernel_strategies: dict[str, str] | None = None  # per-kernel strategy
 
 
 def _prefill_compilette(model_cfg: ModelConfig, seq: int) -> Compilette:
@@ -129,7 +146,9 @@ def make_serve_coordinator(
             # periods earn nothing) and charge reference measurements
             budget_from="busy",
             charge_init=True,
-            headroom=(LatencyHeadroomGate(slo_s=serve.tune_slo_s)
+            headroom=(LatencyHeadroomGate(
+                slo_s=serve.tune_slo_s,
+                slo_quantile=serve.tune_slo_quantile)
                       if serve.tune_slo_s else None),
         ),
         registry_path=serve.registry_path,
@@ -156,6 +175,15 @@ def generate(
 ) -> dict[str, Any]:
     """Prefill the prompt batch, then decode ``max_new_tokens`` greedily."""
     serve = serve or ServeConfig()
+    if serve.kernel_tuning not in KERNEL_TUNING_MODES:
+        raise ValueError(
+            f"kernel_tuning must be one of {KERNEL_TUNING_MODES}, "
+            f"got {serve.kernel_tuning!r}")
+    tune_program = serve.autotune and serve.kernel_tuning in (
+        "program", "both")
+    tune_kernels = serve.autotune and serve.kernel_tuning in (
+        "kernel", "both")
+    tuning = tune_program or tune_kernels
     model = build_model(model_cfg)
     from repro.models.params import init_tree
     params = batch.pop("params", None)
@@ -171,13 +199,35 @@ def generate(
     prefill = jax.jit(model.prefill)
     decode = jax.jit(model.decode_step)
 
-    # ---- online tuning of the two step-programs -------------------------
+    # ---- online tuning: step-programs + constituent kernels -------------
     tune_init_s = 0.0
     decode_state: dict[str, Any] = {}
-    if serve.autotune:
+    plane = None
+    if tuning and coordinator is None:
+        coordinator = make_serve_coordinator(serve)
+    if tune_kernels:
+        # Hierarchical registration, kernel level: the model's
+        # constituent Pallas kernels become independent coordinator-
+        # managed compilettes (own space/strategy/registry key), drawing
+        # regeneration slots from the same shared budget as the
+        # step-programs. Untunable shapes (every point a hole at a
+        # reduced size) are skipped, not fatal.
         t_init = time.perf_counter()
-        if coordinator is None:
-            coordinator = make_serve_coordinator(serve)
+        # one plane per coordinator: handles, live args and compilettes
+        # persist across requests exactly like the managed tuners do
+        plane = KernelTuningPlane.shared(
+            coordinator,
+            strategies=serve.kernel_strategies,
+            # program points own attn_q_chunk/attn_k_chunk in "both"
+            # mode; trace-time adoption only when kernels tune alone
+            adopt_points=not tune_program,
+        )
+        seq_b = coordinator.lifecycle.bucket_length(T)
+        for name, spec in model_kernel_specs(model_cfg, batch=B, seq=seq_b):
+            plane.register_spec(name, spec, require=False)
+        tune_init_s += time.perf_counter() - t_init
+    if tune_program:
+        t_init = time.perf_counter()
         # The compilette's chunk options are bounded by the BUCKETED
         # extent, matching the bucketed specialization key the
         # coordinator registers under — so seq 120 and 150 build the
@@ -196,10 +246,36 @@ def generate(
         # pre-existing) evaluator at THIS request's inputs so measurements
         # stay representative of live traffic.
         prefill.tuner.evaluator.make_args = prefill_ev.make_args
-        tune_init_s = time.perf_counter() - t_init
+        tune_init_s += time.perf_counter() - t_init
+
+    # The plane stays active for the whole request: jitted step-programs
+    # traced in here adopt tuned kernel block sizes, and any eager kernel
+    # call routes through its coordinator-managed handle.
+    plane_ctx = (use_kernel_plane(plane) if plane is not None
+                 else contextlib.nullcontext())
+    with plane_ctx:
+        return _generate_inner(
+            model_cfg, model, params, batch, serve, coordinator,
+            prefill, decode, B, T, max_len, tuning, tune_program,
+            tune_init_s, decode_state)
+
+
+def _generate_inner(
+    model_cfg, model, params, batch, serve, coordinator,
+    prefill, decode, B, T, max_len, tuning, tune_program,
+    tune_init_s, decode_state,
+) -> dict[str, Any]:
+    # Busy-time credit for unmanaged step-programs: with kernel-only
+    # tuning the prefill/decode calls are real traffic a busy-time
+    # budget must accrue from, but no ManagedTuner counts them (a
+    # managed step reports its own calls — never double-credit).
+    credit_busy = tuning and not tune_program
 
     t0 = time.perf_counter()
     logits, cache = prefill(params, batch)
+    if credit_busy:
+        jax.block_until_ready(logits)
+        coordinator.observe_busy(time.perf_counter() - t0)
     # widen KV caches to max_len where the family uses positional caches
     full = model.init_cache(B, max_len)
     widened = []
@@ -216,7 +292,7 @@ def generate(
     out_tokens = [tokens]
     pos0 = T if model_cfg.family != "vlm" else T + model_cfg.vision_patches
 
-    if serve.autotune:
+    if tune_program:
         # The decode evaluator replays the *current* decoding state; its
         # outputs are discarded, so measurement is side-effect-free.
         t_init = time.perf_counter()
@@ -237,12 +313,22 @@ def generate(
 
     t1 = time.perf_counter()
     for i in range(serve.max_new_tokens - 1):
+        t_step = time.perf_counter()
         logits, cache = decode(params, cache, tokens, jnp.int32(pos0 + i))
         tokens = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
         out_tokens.append(tokens)
-        if serve.autotune:
-            decode_state.update(
-                cache=cache, tokens=tokens, pos=jnp.int32(pos0 + i + 1))
+        if tuning:
+            if credit_busy:
+                # sync before crediting: jax dispatch is asynchronous, so
+                # without it the credited interval would be the enqueue
+                # time (µs) while the device executes inside the final
+                # block_until_ready — and a busy-time budget would starve
+                # exactly the kernel tuning this credit exists to fund
+                jax.block_until_ready(tokens)
+                coordinator.observe_busy(time.perf_counter() - t_step)
+            if tune_program:
+                decode_state.update(
+                    cache=cache, tokens=tokens, pos=jnp.int32(pos0 + i + 1))
             coordinator.maybe_pump()
     jax.block_until_ready(tokens)
     t_decode = time.perf_counter() - t1
@@ -255,12 +341,13 @@ def generate(
         "decode_s": t_decode,
         "decode_tokens_per_s": B * n_new / t_decode if t_decode > 0 else 0.0,
     }
-    if serve.autotune:
+    if tuning:
         coordinator.save_registry()
         # Lifecycle pass at request end: converged tuners release the
         # evaluator closures pinning this request's params/batch/cache,
         # and tuners idle past the eviction horizon are unregistered.
         coordinator.sweep()
         out["tune_init_s"] = tune_init_s
+        out["kernel_tuning"] = serve.kernel_tuning
         out["autotune"] = coordinator.stats()
     return out

@@ -24,6 +24,7 @@ Fault tolerance:
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import statistics
 import time
@@ -40,10 +41,11 @@ from repro.core import (
 )
 from repro.data.pipeline import batches_for, device_put_batch
 from repro.distributed.compression import ErrorFeedback
-from repro.models.model import build_model
+from repro.models.model import build_model, model_kernel_specs
 from repro.models.params import init_tree
 from repro.optim.adamw import AdamW, OptimizerConfig
 from repro.runtime.coordinator import TuningCoordinator
+from repro.runtime.kernel_plane import KernelTuningPlane, use_kernel_plane
 
 
 @dataclasses.dataclass
@@ -59,6 +61,8 @@ class TrainLoopConfig:
     tune_strategy: str = "two_phase"    # repro.core.explorer registry name
     tune_async: bool = True             # compile variants off the step path
     tune_prefetch: int = 1              # speculative compiles per slot
+    kernel_tuning: str = "program"      # off | program | kernel | both
+    kernel_strategies: dict[str, str] | None = None  # per-kernel strategy
     compress_grads: bool = False
     straggler_factor: float = 3.0
     fail_at_step: int | None = None     # fault injection (tests)
@@ -116,6 +120,10 @@ def train(
     opt_cfg: OptimizerConfig | None = None,
 ) -> dict[str, Any]:
     loop = loop or TrainLoopConfig()
+    if loop.kernel_tuning not in ("off", "program", "kernel", "both"):
+        raise ValueError(
+            f"kernel_tuning must be off|program|kernel|both, "
+            f"got {loop.kernel_tuning!r}")
     model = build_model(model_cfg)
     optimizer = AdamW(opt_cfg or OptimizerConfig(warmup_steps=10,
                                                  total_steps=loop.steps))
@@ -146,16 +154,14 @@ def train(
 
     coordinator = None
     tuner = None
-    if loop.autotune:
-        comp = _attention_step_compilette(
-            model_cfg, model, optimizer, ef, first_batch, shape.seq_len)
-        spec = {"seq": shape.seq_len}
-        evaluator = Evaluator(
-            mode="real", real_runs=2, warmup=1,
-            make_args=lambda: (params, opt_state, ef_state, first_batch))
+    plane = None
+    tune_program = loop.autotune and loop.kernel_tuning in ("program", "both")
+    tune_kernels = loop.autotune and loop.kernel_tuning in ("kernel", "both")
+    if tune_program or tune_kernels:
         # Process-wide coordinator: one regeneration budget shared by every
-        # tunable step-program, warm-started from the checkpoint-adjacent
-        # registry so a restarted job skips re-exploration.
+        # tunable step-program AND every constituent kernel, warm-started
+        # from the checkpoint-adjacent registry so a restarted job skips
+        # re-exploration.
         coordinator = TuningCoordinator(
             policy=RegenerationPolicy(loop.tune_max_overhead,
                                       loop.tune_invest),
@@ -168,6 +174,23 @@ def train(
             async_generation=loop.tune_async,
             prefetch=loop.tune_prefetch,
         )
+    if tune_kernels:
+        # Hierarchical registration, kernel level: each Pallas kernel of
+        # the step-program tunes as an independent compilette under the
+        # shared budget (untunable reduced shapes are skipped).
+        plane = KernelTuningPlane(
+            coordinator, strategies=loop.kernel_strategies,
+            adopt_points=not tune_program)
+        B_k, T_k = first_batch["tokens"].shape
+        for name, spec in model_kernel_specs(model_cfg, batch=B_k, seq=T_k):
+            plane.register_spec(name, spec, require=False)
+    if tune_program:
+        comp = _attention_step_compilette(
+            model_cfg, model, optimizer, ef, first_batch, shape.seq_len)
+        spec = {"seq": shape.seq_len}
+        evaluator = Evaluator(
+            mode="real", real_runs=2, warmup=1,
+            make_args=lambda: (params, opt_state, ef_state, first_batch))
         tuner = coordinator.register(
             "train_step_attn", comp, evaluator,
             specialization=spec, reference_fn=raw_step,
@@ -180,30 +203,33 @@ def train(
     t_start = time.perf_counter()
     step = start_step
     batch = first_batch
-    while step < loop.steps:
-        if loop.fail_at_step is not None and step == loop.fail_at_step:
-            raise FaultInjected(f"injected failure at step {step}")
-        t0 = time.perf_counter()
-        fn = tuner if tuner is not None else raw_step
-        loss, params, opt_state, ef_state, gnorm = fn(
-            params, opt_state, ef_state, batch)
-        loss = float(loss)
-        if coordinator is not None:
-            coordinator.maybe_pump()
-        dt = time.perf_counter() - t0
-        durations.append(dt)
-        if len(durations) >= 5:
-            med = statistics.median(durations)
-            if dt > loop.straggler_factor * med:
-                stragglers += 1
-        losses.append(loss)
-        step += 1
-        if step % loop.ckpt_every == 0 or step == loop.steps:
-            ckpt.save(step, {"params": params, "opt": opt_state},
-                      extra={"loss": loss})
+    plane_ctx = (use_kernel_plane(plane) if plane is not None
+                 else contextlib.nullcontext())
+    with plane_ctx:
+        while step < loop.steps:
+            if loop.fail_at_step is not None and step == loop.fail_at_step:
+                raise FaultInjected(f"injected failure at step {step}")
+            t0 = time.perf_counter()
+            fn = tuner if tuner is not None else raw_step
+            loss, params, opt_state, ef_state, gnorm = fn(
+                params, opt_state, ef_state, batch)
+            loss = float(loss)
             if coordinator is not None:
-                coordinator.save_registry()
-        batch = device_put_batch(next(stream))
+                coordinator.maybe_pump()
+            dt = time.perf_counter() - t0
+            durations.append(dt)
+            if len(durations) >= 5:
+                med = statistics.median(durations)
+                if dt > loop.straggler_factor * med:
+                    stragglers += 1
+            losses.append(loss)
+            step += 1
+            if step % loop.ckpt_every == 0 or step == loop.steps:
+                ckpt.save(step, {"params": params, "opt": opt_state},
+                          extra={"loss": loss})
+                if coordinator is not None:
+                    coordinator.save_registry()
+            batch = device_put_batch(next(stream))
 
     wall = time.perf_counter() - t_start
     out = {

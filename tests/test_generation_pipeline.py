@@ -122,6 +122,59 @@ def test_cache_lru_bound_evicts_oldest():
     assert comp.compiles["n"] == 4
 
 
+def test_cost_weighted_eviction_keeps_expensive_entries():
+    """Satellite: within the LRU window the CHEAPEST-to-regenerate entry
+    is evicted first, so one expensive variant is not displaced by a
+    parade of trivial ones (equal costs degrade to plain LRU above)."""
+    clock = VirtualClock()
+    cache = GenerationCache(max_entries=2)
+    costly = counted_compilette(clock, "costly", gen_cost_s=1.0)
+    costly.attach_cache(cache, "test:v")
+    cheap = counted_compilette(clock, "cheap", gen_cost_s=0.001)
+    cheap.attach_cache(cache, "test:v")
+    costly.generate({"unroll": 1})     # least recently used AND priciest
+    cheap.generate({"unroll": 1})
+    cheap.generate({"unroll": 2})      # overflow
+    # the cheap older entry went; the expensive one survived being LRU
+    assert costly.cache_key({"unroll": 1}, {}) in cache
+    assert cheap.cache_key({"unroll": 1}, {}) not in cache
+    assert cache.evictions == 1
+    # the survivor is a hit (no recompile), the evicted one recompiles
+    costly.generate({"unroll": 1})
+    assert costly.compiles["n"] == 1
+    cheap.generate({"unroll": 1})
+    assert cheap.compiles["n"] == 3
+
+
+def test_cache_disabled_with_zero_max_entries():
+    """max_entries=0 caches nothing and must not crash the put path."""
+    clock = VirtualClock()
+    cache = GenerationCache(max_entries=0)
+    comp = counted_compilette(clock)
+    comp.attach_cache(cache, "test:v")
+    comp.generate({"unroll": 1})
+    comp.generate({"unroll": 1})            # recompiles: nothing resident
+    assert len(cache) == 0
+    assert comp.compiles["n"] == 2
+    assert cache.evictions == 2
+
+
+def test_fresh_expensive_compile_never_evicts_itself():
+    """The eviction window stops short of the newest entry: a just-landed
+    expensive compile among cheap residents must not be its own victim."""
+    clock = VirtualClock()
+    cache = GenerationCache(max_entries=2)
+    cheap = counted_compilette(clock, "cheap", gen_cost_s=0.001)
+    cheap.attach_cache(cache, "test:v")
+    costly = counted_compilette(clock, "costly", gen_cost_s=1.0)
+    costly.attach_cache(cache, "test:v")
+    cheap.generate({"unroll": 1})
+    cheap.generate({"unroll": 2})
+    costly.generate({"unroll": 1})     # overflow ON the expensive insert
+    assert costly.cache_key({"unroll": 1}, {}) in cache
+    assert cache.evictions == 1
+
+
 def test_cache_entries_survive_retire_and_reregister():
     """Acceptance: a bucket retired by the lifecycle and re-registered
     later re-validates (and re-explores) from the cache — the same
@@ -465,6 +518,80 @@ def test_ewma_tracks_sustained_latency_shift():
     for _ in range(40):
         coord.pump()
     assert m.tuner.accounts.regenerations == regens_before  # frozen
+
+
+# ------------------------------------------------- tail-aware (p99) gate
+def test_latency_histogram_quantiles():
+    from repro.core import LatencyHistogram
+
+    h = LatencyHistogram()
+    assert h.quantile(0.99) == 0.0               # no samples yet
+    for _ in range(98):
+        h.observe(0.001)
+    for _ in range(2):
+        h.observe(0.1)
+    assert h.count == 100
+    # bucket resolution is ~15% relative at 16 buckets/decade
+    assert h.quantile(0.5) == pytest.approx(0.001, rel=0.2)
+    assert h.quantile(0.9) == pytest.approx(0.001, rel=0.2)
+    assert h.quantile(0.99) == pytest.approx(0.1, rel=0.2)
+    assert h.quantile(1.0) == pytest.approx(0.1, rel=0.2)
+    with pytest.raises(ValueError):
+        h.quantile(0.0)
+
+
+def test_p99_gate_freezes_on_tail_the_ewma_misses():
+    """Satellite: with ``slo_quantile=0.99`` the headroom gate reads the
+    log-histogram tail — a kernel whose mean is comfortable but whose
+    p99 already exceeds the SLO is frozen, even though the EWMA (and
+    thus the PR-3 gate) would keep tuning."""
+    clock = VirtualClock()
+    ev = VirtualClockEvaluator(clock)
+    gate = LatencyHeadroomGate(slo_s=0.010, min_headroom_frac=0.25,
+                               slo_quantile=0.99)
+    coord = TuningCoordinator(
+        policy=RegenerationPolicy(1.0, 0.5, headroom=gate),
+        device="test:v", clock=clock)
+    cost_box = {"c": 0.002}
+    m = coord.register("k", make_outlier_compilette(clock, cost_box), ev,
+                       reference_fn=mutable_kernel(clock, cost_box))
+    # a 3% tail of SLO-busting calls spread through otherwise-fast
+    # traffic (the run ends fast, so the EWMA has decayed back down)
+    for i in range(100):
+        cost_box["c"] = 0.02 if i % 34 == 0 else 0.002
+        m(i)
+    cost_box["c"] = 0.002
+    assert m.tuner.accounts.observed_call_s < 0.005     # mean looks fine
+    assert m.tuner.accounts.observed_tail_s > 0.010     # p99 does not
+    # the PR-3 EWMA gate would allow; the tail-aware gate freezes
+    assert gate.allows(m.tuner.accounts.observed_call_s, 0.0)
+    assert not coord.policy.headroom_allows(m.tuner.accounts, 0.0)
+    regens_before = m.tuner.accounts.regenerations
+    for _ in range(40):
+        coord.pump()
+    assert m.tuner.accounts.regenerations == regens_before  # frozen
+
+
+def test_p99_gate_opens_when_tail_is_tight():
+    """Uniformly fast traffic: the p99 estimate sits at the mean and the
+    tail-aware gate behaves exactly like the EWMA gate."""
+    clock = VirtualClock()
+    ev = VirtualClockEvaluator(clock)
+    gate = LatencyHeadroomGate(slo_s=0.010, min_headroom_frac=0.25,
+                               slo_quantile=0.99)
+    coord = TuningCoordinator(
+        policy=RegenerationPolicy(1.0, 0.5, headroom=gate),
+        device="test:v", clock=clock)
+    cost_box = {"c": 0.002}
+    m = coord.register("k", make_outlier_compilette(clock, cost_box), ev,
+                       reference_fn=mutable_kernel(clock, cost_box))
+    for i in range(100):
+        m(i)
+        coord.pump()
+    assert m.tuner.accounts.observed_tail_s == pytest.approx(0.002,
+                                                             rel=0.2)
+    assert coord.policy.headroom_allows(m.tuner.accounts, 0.0)
+    assert m.tuner.accounts.regenerations > 0
 
 
 # ------------------------------------------------------ component split

@@ -354,6 +354,93 @@ def test_serve_unbucketed_accumulates_tuners():
     assert len(prefill_keys) == 2
 
 
+def test_serve_hierarchical_registration_both_levels():
+    """Acceptance (e2e): kernel_tuning="both" registers the step-programs
+    AND their constituent matmul/attention/rmsnorm kernels as independent
+    coordinator-managed compilettes — each with its own strategy — under
+    one shared budget, with per-kernel accounting that sums consistently
+    into the aggregate."""
+    from repro.runtime.serve_loop import (
+        ServeConfig, generate, make_serve_coordinator)
+
+    cfg = REGISTRY["deepseek-7b"].reduced()
+    serve = ServeConfig(max_new_tokens=4, autotune=True,
+                        tune_max_overhead=0.5, kernel_tuning="both",
+                        kernel_strategies={"attention": "greedy"},
+                        seq_buckets=True, idle_evict_s=None)
+    coordinator = make_serve_coordinator(serve)
+    try:
+        batch = {"tokens": jnp.ones((2, 24), jnp.int32)}
+        out = generate(cfg, batch, serve, coordinator=coordinator)
+        assert out["tokens"].shape == (2, 4)
+        assert out["kernel_tuning"] == "both"
+        stats = out["autotune"]
+        names = {m.name for m in coordinator._managed}
+        assert {"serve_prefill", "serve_decode",
+                "matmul", "attention", "rmsnorm"} <= names
+        # per-kernel strategy beside the coordinator default
+        assert stats["kernels"]["attention"]["strategy"] == "greedy"
+        assert stats["kernels"]["matmul"]["strategy"] == "two_phase"
+        # every kernel is an independent compilette with its own space
+        specs = {m.name: m.tuner.compilette.space for m in
+                 coordinator._managed}
+        assert specs["matmul"] is not specs["attention"]
+        # per-kernel accounting rolls up into the aggregate exactly
+        for f in ("gen_spent_s", "gen_stall_s", "eval_spent_s"):
+            rollup = (sum(k[f] for k in stats["kernels"].values())
+                      + stats["retired_accounts"][f])
+            assert rollup == pytest.approx(stats[f]), f
+    finally:
+        coordinator.close()
+
+
+def test_serve_kernel_only_mode_skips_step_programs():
+    """kernel_tuning="kernel": only the constituent kernels register; the
+    un-managed step-programs still credit busy time to the shared
+    budget (a busy-time policy would otherwise starve kernel tuning)."""
+    from repro.runtime.serve_loop import (
+        ServeConfig, generate, make_serve_coordinator)
+
+    cfg = REGISTRY["deepseek-7b"].reduced()
+    serve = ServeConfig(max_new_tokens=4, autotune=True,
+                        tune_max_overhead=0.5, kernel_tuning="kernel",
+                        seq_buckets=True, idle_evict_s=None)
+    coordinator = make_serve_coordinator(serve)
+    try:
+        batch = {"tokens": jnp.ones((2, 24), jnp.int32)}
+        out = generate(cfg, batch, serve, coordinator=coordinator)
+        names = {m.name for m in coordinator._managed}
+        assert "serve_prefill" not in names and "serve_decode" not in names
+        assert {"matmul", "attention", "rmsnorm"} <= names
+        # the step-programs' real traffic accrued busy-time budget
+        assert out["autotune"]["busy_s"] > 0
+        assert coordinator._external_busy_s > 0
+    finally:
+        coordinator.close()
+
+
+def test_serve_rejects_unknown_kernel_tuning_mode():
+    from repro.runtime.serve_loop import ServeConfig, generate
+
+    cfg = REGISTRY["deepseek-7b"].reduced()
+    serve = ServeConfig(max_new_tokens=2, kernel_tuning="bogus")
+    with pytest.raises(ValueError, match="kernel_tuning"):
+        generate(cfg, {"tokens": jnp.ones((1, 8), jnp.int32)}, serve)
+
+
+def test_serve_kernel_tuning_off_disables_autotune():
+    """kernel_tuning="off" wins over autotune=True: no tuners, no
+    "autotune" stats block (the CLIs key their report off its absence)."""
+    from repro.runtime.serve_loop import ServeConfig, generate
+
+    cfg = REGISTRY["deepseek-7b"].reduced()
+    serve = ServeConfig(max_new_tokens=2, autotune=True,
+                        kernel_tuning="off")
+    out = generate(cfg, {"tokens": jnp.ones((1, 8), jnp.int32)}, serve)
+    assert out["tokens"].shape == (1, 2)
+    assert "autotune" not in out
+
+
 def test_serve_idle_tuner_evicted_between_requests():
     """Acceptance: a tuner idle past the eviction horizon is unregistered
     at the next request's lifecycle pass, its evaluator closure released."""
