@@ -1,69 +1,123 @@
-"""Quickstart: online auto-tuning of a short-running kernel (the paper's
-core result, end to end on the real backend).
+"""Quickstart: online auto-tuning through the one front door, `repro.tune`.
 
-    PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py             # real backend
+    PYTHONPATH=src python examples/quickstart.py --virtual   # CI smoke
 
-Runs the Streamcluster euclidean-distance kernel for ~1 s of application
-time. The online auto-tuner explores machine-code variants *while the
-application runs*, swapping in faster kernels under a bounded overhead
-budget, exactly as in the paper.
+The whole integration is ~20 lines: build a ``repro.TuningSession``,
+decorate your jax function with ``@repro.tuned(space=...)``, and keep
+calling it. The session explores machine-code variants *while the
+application runs* — each tuning point's keys are baked into the function
+as trace-time constants (the paper's run-time specialization), variants
+compile off the hot path, and the active function pointer swaps when a
+variant measures faster, all under a bounded overhead budget.
+
+``--virtual`` runs the same control loop on a ``VirtualClock`` (costs
+declared, no sleeps, bit-deterministic) — the no-hardware smoke CI runs.
 """
 
+import argparse
 import sys
 import time
 
 sys.path.insert(0, "src")
 
-import jax
-import jax.numpy as jnp
-
-from repro.core import Evaluator, OnlineAutotuner, RegenerationPolicy
-from repro.kernels.euclid.ops import (
-    euclid_ref, make_euclid_compilette, reference_sisd)
+import repro
+from repro.core import Param, product_space
 
 
 def main() -> None:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels.euclid.ref import euclid_ref
+
     N, M, D = 2048, 64, 64           # points × centers × dimension
-    key = jax.random.PRNGKey(0)
-    x = jax.random.normal(key, (N, D), jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(0), (N, D), jnp.float32)
     c = jax.random.normal(jax.random.PRNGKey(1), (M, D), jnp.float32)
 
-    # the reference kernel a compiler would give you
-    ref = jax.jit(reference_sisd(D))
+    # --- the canonical ~20-line integration --------------------------------
+    session = repro.TuningSession(repro.TuningConfig(
+        max_overhead=0.05, invest=0.5, pump_every=2))
 
-    # the compilette: generates specialized machine-code variants at runtime
-    comp = make_euclid_compilette(N, M, D, backend="jnp")
-    evaluator = Evaluator(mode="training", groups=2, group_size=3,
-                          make_args=lambda: (x, c))
-    tuner = OnlineAutotuner(
-        comp, evaluator,
-        policy=RegenerationPolicy(max_overhead_frac=0.05, invest_frac=0.5),
-        specialization={"dim": D},
-        reference_fn=ref,
-        wake_every=2,
-    )
+    @repro.tuned(session=session, space=product_space([
+        Param("chunk", (8, 16, 32, 64), phase=1)]))
+    def distances(x, c, *, chunk):
+        # Streamcluster euclidean distances, the paper's CPU-bound kernel:
+        # `chunk` is a trace-time constant, so every point unrolls into
+        # its own compiled variant (the deGoal specialization analogue)
+        acc = jnp.zeros((x.shape[0], c.shape[0]), jnp.float32)
+        for i in range(0, x.shape[1], chunk):
+            diff = x[:, None, i:i + chunk] - c[None, :, i:i + chunk]
+            acc = acc + jnp.sum(diff * diff, axis=-1)
+        return acc
 
-    print(f"tuning space: {comp.space.n_code_variants} variants "
-          f"({comp.space.n_valid_variants()} valid)")
     t0 = time.perf_counter()
     calls = 200
-    for i in range(calls):
-        out = tuner(x, c)            # the application just calls the kernel
+    for _ in range(calls):
+        out = distances(x, c)        # the application just calls the kernel
     jax.block_until_ready(out)
     wall = time.perf_counter() - t0
+    # -----------------------------------------------------------------------
 
-    s = tuner.stats()
+    s = distances.stats()
     print(f"app ran {calls} kernel calls in {wall*1e3:.0f} ms")
     print(f"explored {s['n_explored']} variants, {s['swaps']} swaps, "
-          f"tuning overhead {s['overhead_frac']:.1%}")
+          f"tuning overhead {s['tuning_spent_s']/wall:.1%}")
     print(f"reference {s['reference_score_s']*1e6:.0f} us/call -> "
-          f"active {s['active_score_s']*1e6:.0f} us/call "
-          f"(speedup {s['reference_score_s']/s['active_score_s']:.2f}x)")
-    print(f"best point: {s['best_point']}")
+          f"active {s['active_score_s']*1e6:.0f} us/call")
+    print(f"best point: {distances.best_point}")
 
-    err = jnp.abs(tuner.active_fn(x, c) - euclid_ref(x, c)).max()
+    err = jnp.abs(distances(x, c) - euclid_ref(x, c)).max()
     print(f"max abs err vs oracle: {float(err):.2e}")
+    session.close()
+    if float(err) > 1e-3:
+        raise SystemExit("tuned kernel diverged from the oracle")
+
+
+def main_virtual() -> None:
+    """The same loop, deterministic: declared costs, VirtualClock, no sleeps."""
+    from repro.core import VirtualClock, VirtualClockEvaluator
+
+    clock = VirtualClock()
+    session = repro.TuningSession(repro.TuningConfig(
+        max_overhead=1.0, invest=0.5, pump_every=1), clock=clock)
+
+    def cost(unroll: int) -> float:
+        return 0.010 / unroll        # known optimum: the largest unroll
+
+    @repro.tuned(session=session, jit=False, gen_cost_s=0.002,
+                 space=product_space([Param("unroll", (1, 2, 4, 8),
+                                            phase=1)]),
+                 evaluator=VirtualClockEvaluator(
+                     clock, score_fn=lambda f: cost(f.point["unroll"])))
+    def kernel(step, *, unroll):
+        clock.advance(cost(unroll))  # 'execution' burns simulated time
+        return step
+
+    for step in range(400):
+        kernel(step)
+        handle = kernel.handle
+        if handle is not None and handle.tuner.explorer.finished:
+            break
+
+    s = kernel.stats()
+    print(f"virtual: explored {s['n_explored']} variants in "
+          f"{clock():.3f} simulated s, best {kernel.best_point}, "
+          f"gen stall {s['gen_stall_s']:.3f} s")
+    session.close()
+    if kernel.best_point != {"unroll": 8}:
+        raise SystemExit(f"did not converge to the optimum: "
+                         f"{kernel.best_point}")
+    if s["gen_stall_s"] != 0.0:
+        raise SystemExit("async generation stalled the hot path")
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--virtual", action="store_true",
+                    help="deterministic VirtualClock smoke (no hardware, "
+                         "no sleeps) — what CI runs")
+    if ap.parse_args().virtual:
+        main_virtual()
+    else:
+        main()

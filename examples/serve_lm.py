@@ -3,26 +3,28 @@ any assigned architecture (reduced config so it runs on CPU).
 
     PYTHONPATH=src python examples/serve_lm.py --arch rwkv6-1.6b --tokens 32
 
-With ``--autotune`` the prefill/decode step-programs are tuned online by
-the process-wide TuningCoordinator while the request streams tokens;
-``--requests N`` sends N requests through the same coordinator so tuning
-pays off across requests (warm variants, no re-exploration).
+With ``--autotune`` the request streams tokens while one
+:class:`repro.TuningSession` tunes the step-programs and (with
+``--kernel-tuning kernel|both``) their constituent Pallas kernels online;
+``--requests N`` sends N requests through the same session so tuning pays
+off across requests (warm variants, no re-exploration). The tuning flags
+are the canonical ``repro.tune`` set declared by
+``repro.TuningConfig.add_flags``.
 """
 
 import argparse
+import dataclasses
 import sys
 import time
 
 sys.path.insert(0, "src")
 
 import jax
-import jax.numpy as jnp
 
+from repro.api import TuningConfig, TuningSession
 from repro.configs import REGISTRY
-from repro.core import available_strategies
-from repro.runtime.kernel_plane import parse_kernel_strategies
 from repro.runtime.serve_loop import (
-    ServeConfig, generate, make_serve_coordinator)
+    ServeConfig, generate, serve_tuning_defaults)
 
 
 def main() -> None:
@@ -31,38 +33,16 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--tokens", type=int, default=32)
-    ap.add_argument("--autotune", action="store_true")
     ap.add_argument("--requests", type=int, default=1)
-    ap.add_argument("--registry", default=None)
-    ap.add_argument("--strategy", default="two_phase",
-                    choices=available_strategies(),
-                    help="search strategy for the serve tuners")
-    ap.add_argument("--seq-buckets", dest="seq_buckets",
-                    action="store_true", default=True,
-                    help="pow2-bucket seq/max_len tuner keys (default)")
-    ap.add_argument("--no-seq-buckets", dest="seq_buckets",
-                    action="store_false")
-    ap.add_argument("--kernel-tuning", default="program",
-                    choices=["off", "program", "kernel", "both"],
-                    help="tune whole step-programs, individual Pallas "
-                         "kernels, or both levels hierarchically")
-    ap.add_argument("--kernel-strategy", action="append", default=[],
-                    metavar="KERNEL=STRATEGY",
-                    help="per-kernel search strategy (repeatable), "
-                         "e.g. matmul=greedy")
+    # demo-friendly base: a generous overhead cap for short runs
+    base = dataclasses.replace(serve_tuning_defaults(), max_overhead=0.2)
+    TuningConfig.add_flags(ap, base=base)
     args = ap.parse_args()
 
-    kernel_strategies = parse_kernel_strategies(args.kernel_strategy)
-
+    tcfg = TuningConfig.from_flags(args, base=base)
     cfg = REGISTRY[args.arch].reduced()
-    serve = ServeConfig(max_new_tokens=args.tokens, autotune=args.autotune,
-                        tune_max_overhead=0.2, registry_path=args.registry,
-                        tune_strategy=args.strategy,
-                        seq_buckets=args.seq_buckets,
-                        kernel_tuning=args.kernel_tuning,
-                        kernel_strategies=kernel_strategies)
-    tuning_on = args.autotune and args.kernel_tuning != "off"
-    coordinator = make_serve_coordinator(serve) if tuning_on else None
+    serve = ServeConfig(max_new_tokens=args.tokens, tuning=tcfg)
+    session = TuningSession(tcfg) if tcfg.active else None
 
     for req in range(args.requests):
         batch = {
@@ -79,13 +59,13 @@ def main() -> None:
                 jax.random.PRNGKey(1), (args.batch, 16, cfg.d_model)) * 0.05
 
         t0 = time.perf_counter()
-        out = generate(cfg, batch, serve, coordinator=coordinator)
+        out = generate(cfg, batch, serve, session=session)
         print(f"req {req}  arch={args.arch} (reduced)  batch={args.batch}")
         print(f"  prefill {out['prefill_s']*1e3:.0f} ms   "
               f"decode {out['decode_s']*1e3:.0f} ms   "
               f"{out['decode_tokens_per_s']:.1f} tok/s   "
               f"total {time.perf_counter()-t0:.1f}s")
-        if tuning_on:
+        if session is not None:
             a = out["autotune"]
             lc = a["lifecycle"]
             print(f"  tuning[{args.strategy}/{args.kernel_tuning}]: "
@@ -103,6 +83,8 @@ def main() -> None:
                           f"{k['regenerations']} regens "
                           f"gen {k['gen_spent_s']*1e3:.1f} ms "
                           f"eval {k['eval_spent_s']*1e3:.1f} ms")
+    if session is not None:
+        session.close()
     if args.requests > 0:
         print("first sequence:", out["tokens"][0].tolist())
 

@@ -15,10 +15,10 @@ import sys
 
 sys.path.insert(0, "src")
 
-import dataclasses
-
+from repro.api import TuningConfig
 from repro.configs.base import ModelConfig, ShapeSpec
-from repro.runtime.train_loop import TrainLoopConfig, train
+from repro.runtime.train_loop import (
+    TrainLoopConfig, train, train_tuning_defaults)
 
 SIZES = {
     "1m": dict(n_layers=2, d_model=128, n_heads=4, n_kv_heads=2, d_head=32,
@@ -37,8 +37,11 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=256)
     ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
-    ap.add_argument("--autotune", action="store_true")
     ap.add_argument("--compress-grads", action="store_true")
+    # the canonical repro.tune flag set (--autotune, --strategy,
+    # --kernel-tuning, ...) declared once from the train-loop defaults
+    base = train_tuning_defaults()
+    TuningConfig.add_flags(ap, base=base)
     args = ap.parse_args()
 
     cfg = ModelConfig(name=f"lm-{args.params}", family="dense",
@@ -49,8 +52,8 @@ def main() -> None:
         steps=args.steps,
         ckpt_every=max(args.steps // 10, 1),
         ckpt_dir=args.ckpt_dir,
-        autotune=args.autotune,
         compress_grads=args.compress_grads,
+        tuning=TuningConfig.from_flags(args, base=base),
     )
     out = train(cfg, shape, loop)
     print(f"steps {out['start_step']} -> {out['steps']}   "

@@ -1,0 +1,33 @@
+"""repro — online auto-tuning at the level of machine-code generation.
+
+``repro.tune`` / ``repro.tuned`` / ``repro.TuningSession`` are the one
+front door to the tuning machinery (see :mod:`repro.api`); the
+subpackages (``repro.core``, ``repro.kernels``, ``repro.runtime``, …)
+remain importable directly. Exports resolve lazily so ``import
+repro.core`` never drags the runtime stack in.
+"""
+
+_API_EXPORTS = (
+    "KERNEL_TUNING_MODES",
+    "TunedFunction",
+    "TuningConfig",
+    "TuningSession",
+    "default_session",
+    "set_default_session",
+    "tune",
+    "tuned",
+)
+
+__all__ = list(_API_EXPORTS)
+
+
+def __getattr__(name):
+    if name in _API_EXPORTS:
+        from repro import api
+
+        return getattr(api, name)
+    raise AttributeError(f"module 'repro' has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_API_EXPORTS))

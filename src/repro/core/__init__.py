@@ -5,11 +5,13 @@ Public API re-exports.
 
 from repro.core.autotuner import OnlineAutotuner
 from repro.core.compilette import (
+    DEFAULT_ENTRY_BYTES,
     AsyncGenerator,
     Compilette,
     GeneratedKernel,
     GenerationCache,
     GenerationTicket,
+    executable_bytes,
 )
 from repro.core.decision import (
     LatencyHeadroomGate,
@@ -57,9 +59,11 @@ __all__ = [
     "OnlineAutotuner",
     "AsyncGenerator",
     "Compilette",
+    "DEFAULT_ENTRY_BYTES",
     "GeneratedKernel",
     "GenerationCache",
     "GenerationTicket",
+    "executable_bytes",
     "LatencyHeadroomGate",
     "LatencyHistogram",
     "RegenerationPolicy",

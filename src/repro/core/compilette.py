@@ -66,6 +66,35 @@ class GeneratedKernel:
     meta: dict[str, Any] = dataclasses.field(default_factory=dict)
 
 
+# Residency estimate for cache entries whose executable size is unknown
+# (lazy jit wrappers, virtual kernels): a byte-bounded cache must charge
+# SOMETHING per entry or unknown-size entries would make the bound a
+# no-op.
+DEFAULT_ENTRY_BYTES = 64 * 1024
+
+
+def executable_bytes(fn: Callable[..., Any]) -> int | None:
+    """Estimated resident bytes of an AOT-compiled XLA executable.
+
+    Reads the compiled artifact's ``memory_analysis()`` (generated code
+    plus temp scratch — the allocations the executable itself pins;
+    argument/output buffers are caller-owned traffic, not residency).
+    ``None`` when the callable is not an AOT ``Compiled`` object or the
+    backend does not report an analysis.
+    """
+    try:
+        analysis = fn.memory_analysis()
+    except Exception:
+        return None
+    total = 0
+    for attr in ("generated_code_size_in_bytes", "temp_size_in_bytes"):
+        try:
+            total += int(getattr(analysis, attr, 0) or 0)
+        except Exception:
+            continue
+    return total if total > 0 else None
+
+
 class GenerationCache:
     """Process-wide memo of compiled variants, keyed by full identity.
 
@@ -86,17 +115,31 @@ class GenerationCache:
     entries degrade to plain LRU). The window keeps the policy local:
     recently used entries are never sacrificed however cheap they are.
 
+    **Byte bound.** ``max_bytes`` additionally bounds the *estimated
+    resident bytes* of the cached executables (compiled XLA code pins
+    host/device memory in proportion to its size, not its entry count):
+    every entry is charged its ``meta["size_bytes"]`` — recorded at
+    compile time from the AOT artifact's memory analysis — or
+    :data:`DEFAULT_ENTRY_BYTES` when unknown. Overflowing either bound
+    evicts through the same cost-weighted window; the newest entry is
+    never its own victim, so one entry larger than ``max_bytes`` stays
+    resident until displaced (evicting it on arrival would make the
+    cache useless for exactly the kernels it exists to keep).
+
     Thread-safe: the coordinator's tuning thread, the async compile
     worker, and the application thread may all hit it concurrently.
     """
 
     def __init__(self, max_entries: int | None = None,
-                 evict_window: int = 8) -> None:
+                 evict_window: int = 8,
+                 max_bytes: int | None = None) -> None:
         self._table: "collections.OrderedDict[tuple, GeneratedKernel]" = (
             collections.OrderedDict())
         self._mu = threading.Lock()
         self.max_entries = max_entries
+        self.max_bytes = max_bytes
         self.evict_window = max(int(evict_window), 1)
+        self._bytes = 0
         self.hits = 0
         self.misses = 0
         self.evictions = 0
@@ -127,17 +170,37 @@ class GenerationCache:
         """What evicting this entry would cost to recompile later."""
         return float(kern.meta.get("compiled_in_s", kern.generation_time_s))
 
+    @staticmethod
+    def _entry_bytes(kern: GeneratedKernel) -> int:
+        """Residency charge of one entry against the byte bound."""
+        size = kern.meta.get("size_bytes")
+        return int(size) if size else DEFAULT_ENTRY_BYTES
+
+    def _over_bounds(self) -> bool:
+        return (
+            (self.max_entries is not None
+             and len(self._table) > self.max_entries)
+            or (self.max_bytes is not None and self._bytes > self.max_bytes)
+        )
+
     def put(self, key: tuple, kern: GeneratedKernel) -> None:
         with self._mu:
+            old = self._table.pop(key, None)
+            if old is not None:
+                self._bytes -= self._entry_bytes(old)
             self._table[key] = kern
-            self._table.move_to_end(key)
-            while (self.max_entries is not None
-                   and len(self._table) > self.max_entries):
+            self._bytes += self._entry_bytes(kern)
+            while self._over_bounds():
                 if len(self._table) == 1:
-                    # max_entries=0 (caching disabled): nothing can stay
-                    self._table.popitem(last=False)
-                    self.evictions += 1
-                    continue
+                    if self.max_entries is not None and self.max_entries < 1:
+                        # max_entries=0 (caching disabled): nothing can stay
+                        _, lone = self._table.popitem(last=False)
+                        self._bytes -= self._entry_bytes(lone)
+                        self.evictions += 1
+                        continue
+                    # one entry larger than max_bytes: the newest entry is
+                    # never its own victim, so it stays until displaced
+                    break
                 # cheapest-to-regenerate among the LRU window; min() keeps
                 # the first (= least recently used) entry on cost ties.
                 # The window never reaches the newest entry (cap at
@@ -146,8 +209,10 @@ class GenerationCache:
                 window = itertools.islice(
                     self._table.items(),
                     min(self.evict_window, len(self._table) - 1))
-                victim, _ = min(window, key=lambda kv: self._regen_cost(kv[1]))
+                victim, evicted = min(
+                    window, key=lambda kv: self._regen_cost(kv[1]))
                 del self._table[victim]
+                self._bytes -= self._entry_bytes(evicted)
                 self.evictions += 1
 
     def __len__(self) -> int:
@@ -161,12 +226,15 @@ class GenerationCache:
     def clear(self) -> None:
         with self._mu:
             self._table.clear()
+            self._bytes = 0
 
     def stats(self) -> dict[str, Any]:
         with self._mu:
             total = self.hits + self.misses
             return {
                 "entries": len(self._table),
+                "bytes": self._bytes,
+                "max_bytes": self.max_bytes,
                 "hits": self.hits,
                 "misses": self.misses,
                 "evictions": self.evictions,
@@ -280,7 +348,10 @@ class Compilette:
             generation_time_s=dt if sim is None else sim,
             specialization=dict(specialization),
             meta={"source": "compiled", "simulated": sim is not None,
-                  "compiled_in_s": dt if sim is None else sim},
+                  "compiled_in_s": dt if sim is None else sim,
+                  # byte-bounded caches charge this residency estimate
+                  # (None → DEFAULT_ENTRY_BYTES at the cache)
+                  "size_bytes": executable_bytes(fn)},
         )
         if self.cache is not None and key is not None:
             self.cache.put(key, kern)

@@ -3,30 +3,28 @@
     PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-1.6b --reduced \
         [--autotune --requests 4 --registry /tmp/serve_tuned.json]
 
-With ``--autotune`` the prefill and decode step-programs are tuned online
-by the process-wide TuningCoordinator; ``--requests N`` issues N identical
-requests through ONE coordinator, so later requests ride the variants the
-earlier ones discovered (and ``--registry`` persists them across restarts).
-``--strategy`` picks the search strategy (two_phase/random/greedy/...),
-``--seq-buckets/--no-seq-buckets`` controls power-of-two bucketing of the
-per-shape serve tuners.
+All tuning knobs are the canonical ``repro.tune`` flag set, declared once
+by :meth:`repro.TuningConfig.add_flags` (strategy, kernel granularity and
+per-kernel strategies, budget caps, SLO gate, bucketing, async pipeline);
+the CLI builds one :class:`repro.TuningSession` and every request rides
+it, so later requests reuse the variants earlier ones discovered (and
+``--registry`` persists them across restarts).
 
 ``--kernel-tuning`` selects the tuning granularity: ``program`` (whole
-step-programs, the pre-PR-4 behaviour), ``kernel`` (the model's matmul /
-attention / rmsnorm Pallas kernels tune as independent coordinator-managed
-compilettes), ``both`` (hierarchical: step-programs plus their constituent
-kernels under one shared budget) or ``off``. ``--kernel-strategy
-name=strategy`` (repeatable) assigns a search strategy per kernel, e.g.
-``--kernel-strategy matmul=greedy --kernel-strategy attention=random``.
-``--slo-quantile 0.99`` makes the latency-headroom gate tail-aware (gates
-on the log-histogram p99 instead of the per-call EWMA).
+step-programs), ``kernel`` (the model's matmul / attention / rmsnorm /
+decode_attention Pallas kernels tune as independent session-managed
+compilettes), ``both`` (hierarchical: step-programs plus their
+constituent kernels under one shared budget) or ``off``.
 """
 
 import argparse
 
 
 def main() -> None:
-    from repro.core import available_strategies
+    # repro.api is jax-free: --help and flag errors stay fast; the
+    # jax-heavy loop modules load only after parsing succeeds
+    from repro.api import (
+        TuningConfig, TuningSession, serve_tuning_defaults)
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -34,78 +32,26 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--tokens", type=int, default=32)
-    ap.add_argument("--autotune", action="store_true")
     ap.add_argument("--requests", type=int, default=1)
-    ap.add_argument("--registry", default=None,
-                    help="tuned-point registry path (warm-start)")
-    ap.add_argument("--tune-overhead", type=float, default=0.05,
-                    help="serving overhead cap (fraction of busy time)")
-    ap.add_argument("--strategy", default="two_phase",
-                    choices=available_strategies(),
-                    help="search strategy for every serve tuner")
-    ap.add_argument("--seq-buckets", dest="seq_buckets",
-                    action="store_true", default=True,
-                    help="pow2-bucket seq/max_len tuner keys (default)")
-    ap.add_argument("--no-seq-buckets", dest="seq_buckets",
-                    action="store_false",
-                    help="one tuner per exact (seq, batch) shape")
-    ap.add_argument("--slo", type=float, default=None,
-                    help="per-step latency SLO in seconds "
-                         "(headroom-gates tuning)")
-    ap.add_argument("--slo-quantile", type=float, default=None,
-                    help="gate on this latency quantile (e.g. 0.99 for "
-                         "p99) instead of the per-call EWMA; needs --slo")
-    ap.add_argument("--kernel-tuning", default="program",
-                    choices=["off", "program", "kernel", "both"],
-                    help="tuning granularity: whole step-programs, "
-                         "individual Pallas kernels, or both levels "
-                         "hierarchically under one shared budget")
-    ap.add_argument("--kernel-strategy", action="append", default=[],
-                    metavar="KERNEL=STRATEGY",
-                    help="per-kernel search strategy override "
-                         "(repeatable), e.g. matmul=greedy")
-    ap.add_argument("--sync-generation", dest="async_generation",
-                    action="store_false", default=True,
-                    help="compile candidate variants inline on the "
-                         "request path (paper's original synchronous "
-                         "cycle) instead of the background pipeline")
-    ap.add_argument("--prefetch", type=int, default=1,
-                    help="speculative compiles per tuning slot (0=off)")
+    # the canonical tuning flag set, declared once; the serving regime
+    # (busy-time budget, charged init, 5% cap) seeds the flag defaults
+    base = serve_tuning_defaults()
+    TuningConfig.add_flags(ap, base=base)
     args = ap.parse_args()
-    if args.slo_quantile is not None and args.slo is None:
-        ap.error("--slo-quantile has no effect without --slo (the "
-                 "headroom gate only exists when an SLO is set)")
 
     import jax
 
     from repro.configs import get_config
-    from repro.runtime.serve_loop import (
-        ServeConfig, generate, make_serve_coordinator)
+    from repro.runtime.serve_loop import ServeConfig, generate
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
-    from repro.runtime.kernel_plane import parse_kernel_strategies
-
-    kernel_strategies = parse_kernel_strategies(args.kernel_strategy)
-    serve = ServeConfig(
-        max_new_tokens=args.tokens,
-        autotune=args.autotune,
-        tune_max_overhead=args.tune_overhead,
-        tune_strategy=args.strategy,
-        tune_slo_s=args.slo,
-        tune_slo_quantile=args.slo_quantile,
-        seq_buckets=args.seq_buckets,
-        registry_path=args.registry,
-        async_generation=args.async_generation,
-        prefetch=args.prefetch,
-        kernel_tuning=args.kernel_tuning,
-        kernel_strategies=kernel_strategies,
-    )
+    tcfg = TuningConfig.from_flags(args, base=base)
+    serve = ServeConfig(max_new_tokens=args.tokens, tuning=tcfg)
     # kernel_tuning="off" disables tuning even with --autotune: no
-    # coordinator, and generate() emits no "autotune" stats block
-    tuning_on = args.autotune and args.kernel_tuning != "off"
-    coordinator = make_serve_coordinator(serve) if tuning_on else None
+    # session, and generate() emits no "autotune" stats block
+    session = TuningSession(tcfg) if tcfg.active else None
 
     for req in range(args.requests):
         batch = {"tokens": jax.random.randint(
@@ -118,10 +64,10 @@ def main() -> None:
         if cfg.family == "vlm":
             batch["vision"] = jax.random.normal(
                 jax.random.PRNGKey(1), (args.batch, 16, cfg.d_model)) * 0.05
-        out = generate(cfg, batch, serve, coordinator=coordinator)
+        out = generate(cfg, batch, serve, session=session)
         line = (f"req {req}: {out['decode_tokens_per_s']:.1f} tok/s, "
                 f"prefill {out['prefill_s']*1e3:.0f} ms")
-        if tuning_on:
+        if session is not None:
             a = out["autotune"]
             lc = a["lifecycle"]
             gc = a["generation_cache"]
@@ -140,6 +86,8 @@ def main() -> None:
                     if k.get("plane_managed"))
                 line += f"\n        kernels: {per}"
         print(line)
+    if session is not None:
+        session.close()
 
 
 if __name__ == "__main__":

@@ -55,6 +55,23 @@ def plane_attn_chunks(cfg: ModelConfig) -> tuple[int, int]:
     return cfg.attn_q_chunk, cfg.attn_k_chunk
 
 
+def plane_decode_chunk(cfg: ModelConfig) -> int:
+    """Flash-decoding KV chunk: the plane's tuned ``k_chunk``, else cfg's.
+
+    Trace-time adoption for the decode path: a jitted decode step traced
+    while a plane is active inherits the ``decode_attention`` kernel's
+    independently tuned chunk (per cache-length bucket) instead of the
+    hard-coded ``cfg.decode_k_chunk`` — suppressed, like the attention
+    chunks, when a program-level tuner owns the knob ("both" mode).
+    """
+    plane = active_plane()
+    if plane is not None and plane.adopt_points:
+        best = plane.best_point("decode_attention")
+        if best is not None:
+            return int(best.get("k_chunk", cfg.decode_k_chunk))
+    return cfg.decode_k_chunk
+
+
 # ----------------------------------------------------------------- norms
 def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
     plane = _plane_routes(x, scale)
@@ -299,8 +316,16 @@ def decode_self_attention(
     cache_k = shard(cache_k, "batch", "kv_seq", "kv", "kv_dh")
     cache_v = shard(cache_v, "batch", "kv_seq", "kv", "kv_dh")
     length = jnp.minimum(pos + 1, S_eff)
-    o = decode_attention(q, cache_k, cache_v, length=length,
-                         k_chunk=cfg.decode_k_chunk)
+    plane = _plane_routes(q, cache_k, cache_v)
+    o = None
+    if plane is not None:
+        # eager call with an active plane: flash-decoding runs as an
+        # independently tuned unit, keyed per cache-length bucket
+        o = plane.call("decode_attention", q, cache_k, cache_v,
+                       jnp.asarray(length, jnp.int32))
+    if o is None:
+        o = decode_attention(q, cache_k, cache_v, length=length,
+                             k_chunk=plane_decode_chunk(cfg))
     return attn_out(o, p, cfg), (cache_k, cache_v)
 
 
@@ -315,7 +340,8 @@ def cross_attention(
     """Decoder cross-attention against precomputed encoder K/V."""
     q = jnp.einsum("btd,dhk->bthk", x, p["wq"].astype(x.dtype))
     if x.shape[1] == 1:
-        o = decode_attention(q, enc_k, enc_v, k_chunk=cfg.decode_k_chunk)
+        o = decode_attention(q, enc_k, enc_v,
+                             k_chunk=plane_decode_chunk(cfg))
     else:
         o = flash_attention_jnp(
             q, enc_k, enc_v, causal=False,

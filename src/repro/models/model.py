@@ -27,7 +27,7 @@ def build_model(cfg: ModelConfig):
 
 
 def model_kernel_specs(
-    cfg: ModelConfig, *, batch: int, seq: int,
+    cfg: ModelConfig, *, batch: int, seq: int, max_len: int | None = None,
 ) -> list[tuple[str, dict]]:
     """Constituent tunable kernels of a model's step-programs.
 
@@ -37,6 +37,11 @@ def model_kernel_specs(
     tuning space, strategy, registry key and cache lines). The paper's
     unit of analysis — the individual short-running kernel — keyed by
     the run-time constants the model bakes into it.
+
+    ``max_len`` is the (pre-bucketed) KV-cache extent of a decode path:
+    when given, the flash-decoding ``decode_attention`` kernel registers
+    keyed per cache-length bucket (training loops pass nothing — they
+    have no decode step).
     """
     dt = str(jnp.dtype(cfg.compute_dtype))
     specs: list[tuple[str, dict]] = [
@@ -51,4 +56,11 @@ def model_kernel_specs(
             ("attention", {"B": batch, "Tq": seq, "Tkv": seq,
                            "H": cfg.n_heads, "Hk": cfg.n_kv_heads,
                            "Dh": cfg.d_head, "causal": True, "dtype": dt}))
+        if max_len:
+            # decode path: the KV-chunk scan over the allocated cache
+            specs.append(
+                ("decode_attention", {"B": batch, "S": int(max_len),
+                                      "H": cfg.n_heads,
+                                      "Hk": cfg.n_kv_heads,
+                                      "Dh": cfg.d_head, "dtype": dt}))
     return specs

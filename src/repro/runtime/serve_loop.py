@@ -1,9 +1,9 @@
 """Serving runtime: batched prefill + greedy decode with KV/state cache.
 
-Online auto-tuning (paper technique, serving workload): the prefill and
-decode step-programs are tunable compilettes — attention chunking for
-prefill, flash-decoding KV-chunk for decode — managed by the process-wide
-:class:`TuningCoordinator` under a serving-grade regime:
+Online auto-tuning (paper technique, serving workload) is configured by
+the embedded :class:`~repro.api.TuningConfig` (``ServeConfig.tuning``)
+and owned by a :class:`~repro.api.TuningSession` — the one front door to
+the coordinator machinery. The serving regime it runs under:
 
   * the regeneration budget accrues from **busy time** (kernel-call time
     actually observed), not lifetime wall-clock, so a long-idle server
@@ -13,29 +13,32 @@ prefill, flash-decoding KV-chunk for decode — managed by the process-wide
     space), so varied prompt shapes share tuners instead of accumulating
     one tuner (plus pinned evaluation closures) per exact shape;
   * exhausted tuners converge (closures released) and idle tuners are
-    evicted by the coordinator's :class:`TunerLifecycle`;
-  * the search strategy is pluggable (``ServeConfig.strategy``: any name
-    registered in :mod:`repro.core.explorer`);
+    evicted by the session lifecycle;
+  * the search strategy is pluggable (``TuningConfig.strategy``: any
+    name registered in :mod:`repro.core.explorer`);
   * **candidate compilation is off the request path**: variants are
-    built by the coordinator's background :class:`AsyncGenerator` (and
-    memoized in its process-wide :class:`GenerationCache`, so buckets
-    re-registered after eviction or a restart warm-start never
-    recompile) while the live step-programs keep serving — the paper's
-    double-buffered code generation, serving-grade;
+    built by the session's background pipeline (and memoized in its
+    process-wide generation cache, so buckets re-registered after
+    eviction or a restart warm-start never recompile) while the live
+    step-programs keep serving — the paper's double-buffered code
+    generation, serving-grade;
   * **hierarchical registration** (``kernel_tuning``): beside the whole
-    step-programs, the model's constituent Pallas kernels (matmul,
-    attention, rmsnorm) register as independent compilettes through the
-    :class:`~repro.runtime.kernel_plane.KernelTuningPlane` — each with
-    its own tuning space, search strategy (``kernel_strategies``),
-    registry warm-start key and generation-cache lines, all drawing
-    slots from the same shared budget. ``"program"`` is the pre-PR-4
-    behaviour, ``"kernel"`` tunes only the kernels (step-programs adopt
-    the kernels' best block sizes at trace time), ``"both"`` runs the
-    two levels together (program points own the step-level knobs).
+    step-programs, ``session.attach_kernels`` registers the model's
+    constituent Pallas kernels (matmul, attention, rmsnorm, and the
+    decode path's flash-decoding ``decode_attention`` keyed per
+    cache-length bucket) as independent compilettes — each with its own
+    tuning space, search strategy, registry warm-start key and
+    generation-cache lines, all drawing slots from the same shared
+    budget. ``"program"`` is the pre-PR-4 behaviour, ``"kernel"`` tunes
+    only the kernels (step-programs adopt the kernels' best block sizes
+    at trace time), ``"both"`` runs the two levels together (program
+    points own the step-level knobs).
 
-Pass a long-lived coordinator (one per serving process) so tuning state,
+Pass a long-lived session (one per serving process) so tuning state,
 budget and warm-started best points persist across requests; within a
 single ``generate`` call tuning already begins between decode steps.
+``make_serve_coordinator`` and the bare ``coordinator=`` argument remain
+as deprecated shims over the session.
 """
 
 from __future__ import annotations
@@ -43,50 +46,91 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 import time
+import warnings
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 
+from repro.api import (
+    KERNEL_TUNING_MODES,
+    TuningConfig,
+    TuningSession,
+    apply_tuning_kwargs,
+    install_tuning_aliases,
+    serve_tuning_defaults,
+)
 from repro.configs.base import ModelConfig
 from repro.core import (
     Compilette,
     Evaluator,
-    LatencyHeadroomGate,
     Param,
-    RegenerationPolicy,
     clamped_options,
     product_space,
 )
-from repro.models.model import build_model, model_kernel_specs
-from repro.runtime.coordinator import TuningCoordinator
-from repro.runtime.kernel_plane import KernelTuningPlane, use_kernel_plane
-from repro.runtime.lifecycle import TunerLifecycle
+from repro.models.model import build_model
 
-KERNEL_TUNING_MODES = ("off", "program", "kernel", "both")
+__all__ = [
+    "KERNEL_TUNING_MODES",
+    "ServeConfig",
+    "generate",
+    "make_serve_coordinator",
+    "serve_tuning_defaults",   # re-export: the regime base lives in api
+]
+
+# legacy ServeConfig field → TuningConfig field
+_TUNING_ALIASES = {
+    "autotune": "enabled",
+    "tune_max_overhead": "max_overhead",
+    "tune_invest": "invest",
+    "tune_strategy": "strategy",
+    "tune_slo_s": "slo_s",
+    "tune_slo_quantile": "slo_quantile",
+    "seq_buckets": "seq_buckets",
+    "idle_evict_s": "idle_evict_s",
+    "registry_path": "registry_path",
+    "pump_every": "pump_every",
+    "async_generation": "async_generation",
+    "prefetch": "prefetch",
+    "kernel_tuning": "kernel_tuning",
+    "kernel_strategies": "strategies",
+}
 
 
-@dataclasses.dataclass
 class ServeConfig:
-    max_new_tokens: int = 32
-    greedy: bool = True
-    temperature: float = 1.0
-    seed: int = 0
-    # --- online auto-tuning (off by default: zero-overhead serving) ------
-    autotune: bool = False
-    tune_max_overhead: float = 0.05   # strict serving cap: ≤5 % of BUSY time
-    tune_invest: float = 0.10
-    tune_strategy: str = "two_phase"  # any repro.core.explorer registry name
-    tune_slo_s: float | None = None   # per-step latency SLO (headroom gate)
-    tune_slo_quantile: float | None = None  # e.g. 0.99: gate on p99, not mean
-    seq_buckets: bool = True          # pow2-bucket seq/max_len tuner keys
-    idle_evict_s: float | None = 300.0  # retire tuners idle this long
-    registry_path: str | None = None  # warm-start across server restarts
-    pump_every: int = 4               # decode steps between tuning slots
-    async_generation: bool = True     # compile variants off the hot path
-    prefetch: int = 1                 # speculative compiles per slot (0=off)
-    kernel_tuning: str = "program"    # off | program | kernel | both
-    kernel_strategies: dict[str, str] | None = None  # per-kernel strategy
+    """Serving knobs; tuning knobs live in the embedded ``tuning`` config.
+
+    The legacy flat fields (``autotune``, ``tune_strategy``,
+    ``kernel_strategies``, …) remain accepted as constructor keywords
+    and readable/writable properties, aliasing into ``self.tuning`` —
+    pre-PR-5 call sites keep working unchanged.
+    """
+
+    def __init__(
+        self,
+        max_new_tokens: int = 32,
+        greedy: bool = True,
+        temperature: float = 1.0,
+        seed: int = 0,
+        tuning: TuningConfig | None = None,
+        **legacy: Any,
+    ) -> None:
+        self.max_new_tokens = max_new_tokens
+        self.greedy = greedy
+        self.temperature = temperature
+        self.seed = seed
+        self.tuning = tuning if tuning is not None else \
+            serve_tuning_defaults()
+        apply_tuning_kwargs(self.tuning, _TUNING_ALIASES, legacy,
+                            "ServeConfig")
+
+    def __repr__(self) -> str:  # cache_token-stable (identity-free)
+        return (f"ServeConfig(max_new_tokens={self.max_new_tokens}, "
+                f"greedy={self.greedy}, temperature={self.temperature}, "
+                f"seed={self.seed}, tuning={self.tuning})")
+
+
+install_tuning_aliases(ServeConfig, _TUNING_ALIASES)
 
 
 def _prefill_compilette(model_cfg: ModelConfig, seq: int) -> Compilette:
@@ -134,56 +178,51 @@ def _decode_compilette(model_cfg: ModelConfig, max_len: int) -> Compilette:
                       cache_token=repr(model_cfg))
 
 
-def make_serve_coordinator(
-    serve: ServeConfig, *, clock=None
-) -> TuningCoordinator:
-    """One coordinator per serving process (shared across requests)."""
-    return TuningCoordinator(
-        policy=RegenerationPolicy(
-            max_overhead_frac=serve.tune_max_overhead,
-            invest_frac=serve.tune_invest,
-            # serving-grade budget: accrue from kernel busy time (idle
-            # periods earn nothing) and charge reference measurements
-            budget_from="busy",
-            charge_init=True,
-            headroom=(LatencyHeadroomGate(
-                slo_s=serve.tune_slo_s,
-                slo_quantile=serve.tune_slo_quantile)
-                      if serve.tune_slo_s else None),
-        ),
-        registry_path=serve.registry_path,
-        pump_every=serve.pump_every,
-        lifecycle=TunerLifecycle(
-            seq_buckets=serve.seq_buckets,
-            idle_evict_s=serve.idle_evict_s,
-        ),
-        strategy=serve.tune_strategy,
-        clock=clock,
-        # double-buffered generation: candidate step-programs compile in
-        # the background executor (and land in the process-wide variant
-        # cache) while the live prefill/decode functions keep serving
-        async_generation=serve.async_generation,
-        prefetch=serve.prefetch,
-    )
+def make_serve_coordinator(serve: ServeConfig, *, clock=None):
+    """Deprecated: build the serving session's coordinator directly.
+
+    Thin shim over :class:`repro.api.TuningSession` — the session API is
+    the one front door; this remains so pre-PR-5 call sites (and their
+    tests) keep working. Returns the coordinator of a fresh session; the
+    session is recoverable via ``TuningSession.adopt``.
+    """
+    warnings.warn(
+        "make_serve_coordinator is deprecated: construct a "
+        "repro.TuningSession(serve.tuning) and pass session=... to "
+        "generate()", DeprecationWarning, stacklevel=2)
+    return TuningSession(serve.tuning, clock=clock).coordinator
 
 
 def generate(
     model_cfg: ModelConfig,
     batch: dict[str, Any],
     serve: ServeConfig | None = None,
-    coordinator: TuningCoordinator | None = None,
+    coordinator: Any | None = None,
+    session: TuningSession | None = None,
 ) -> dict[str, Any]:
-    """Prefill the prompt batch, then decode ``max_new_tokens`` greedily."""
+    """Prefill the prompt batch, then decode ``max_new_tokens`` greedily.
+
+    Tuning state lives in ``session`` (one per serving process). The
+    legacy ``coordinator=`` argument is adopted into its session; with
+    neither, an ephemeral session is built from ``serve.tuning`` and
+    closed when the request finishes.
+    """
     serve = serve or ServeConfig()
-    if serve.kernel_tuning not in KERNEL_TUNING_MODES:
+    tcfg = serve.tuning
+    if tcfg.kernel_tuning not in KERNEL_TUNING_MODES:
         raise ValueError(
             f"kernel_tuning must be one of {KERNEL_TUNING_MODES}, "
-            f"got {serve.kernel_tuning!r}")
-    tune_program = serve.autotune and serve.kernel_tuning in (
-        "program", "both")
-    tune_kernels = serve.autotune and serve.kernel_tuning in (
-        "kernel", "both")
+            f"got {tcfg.kernel_tuning!r}")
+    tune_program = tcfg.tune_program
+    tune_kernels = tcfg.tune_kernels
     tuning = tune_program or tune_kernels
+    own_session = False
+    if tuning and session is None:
+        if coordinator is not None:
+            session = TuningSession.adopt(coordinator, tcfg)
+        else:
+            session = TuningSession(tcfg)
+            own_session = True
     model = build_model(model_cfg)
     from repro.models.params import init_tree
     params = batch.pop("params", None)
@@ -202,41 +241,27 @@ def generate(
     # ---- online tuning: step-programs + constituent kernels -------------
     tune_init_s = 0.0
     decode_state: dict[str, Any] = {}
-    plane = None
-    if tuning and coordinator is None:
-        coordinator = make_serve_coordinator(serve)
     if tune_kernels:
         # Hierarchical registration, kernel level: the model's
-        # constituent Pallas kernels become independent coordinator-
-        # managed compilettes (own space/strategy/registry key), drawing
+        # constituent Pallas kernels become independent session-managed
+        # compilettes (own space/strategy/registry key), drawing
         # regeneration slots from the same shared budget as the
         # step-programs. Untunable shapes (every point a hole at a
         # reduced size) are skipped, not fatal.
         t_init = time.perf_counter()
-        # one plane per coordinator: handles, live args and compilettes
-        # persist across requests exactly like the managed tuners do
-        plane = KernelTuningPlane.shared(
-            coordinator,
-            strategies=serve.kernel_strategies,
-            # program points own attn_q_chunk/attn_k_chunk in "both"
-            # mode; trace-time adoption only when kernels tune alone
-            adopt_points=not tune_program,
-        )
-        seq_b = coordinator.lifecycle.bucket_length(T)
-        for name, spec in model_kernel_specs(model_cfg, batch=B, seq=seq_b):
-            plane.register_spec(name, spec, require=False)
+        session.attach_kernels(model_cfg, batch=B, seq=T, max_len=max_len)
         tune_init_s += time.perf_counter() - t_init
     if tune_program:
         t_init = time.perf_counter()
         # The compilette's chunk options are bounded by the BUCKETED
         # extent, matching the bucketed specialization key the
-        # coordinator registers under — so seq 120 and 150 build the
+        # session registers under — so seq 120 and 150 build the
         # identical 128-bucket space and share one tuner.
-        seq_b = coordinator.lifecycle.bucket_length(T)
+        seq_b = session.coordinator.lifecycle.bucket_length(T)
         prefill_ev = Evaluator(
             mode="real", real_runs=1, warmup=1,
             make_args=lambda: (params, batch))
-        prefill = coordinator.register(
+        prefill = session.register(
             "serve_prefill", _prefill_compilette(model_cfg, seq_b),
             prefill_ev,
             specialization={"seq": T, "batch": B},
@@ -248,20 +273,24 @@ def generate(
         prefill.tuner.evaluator.make_args = prefill_ev.make_args
         tune_init_s += time.perf_counter() - t_init
 
-    # The plane stays active for the whole request: jitted step-programs
-    # traced in here adopt tuned kernel block sizes, and any eager kernel
-    # call routes through its coordinator-managed handle.
-    plane_ctx = (use_kernel_plane(plane) if plane is not None
-                 else contextlib.nullcontext())
-    with plane_ctx:
-        return _generate_inner(
-            model_cfg, model, params, batch, serve, coordinator,
-            prefill, decode, B, T, max_len, tuning, tune_program,
-            tune_init_s, decode_state)
+    # The session scope stays active for the whole request: jitted
+    # step-programs traced in here adopt tuned kernel block sizes, and
+    # any eager kernel call routes through its managed handle.
+    scope_ctx = session.scope() if session is not None \
+        else contextlib.nullcontext()
+    try:
+        with scope_ctx:
+            return _generate_inner(
+                model_cfg, model, params, batch, serve, session,
+                prefill, decode, B, T, max_len, tuning, tune_program,
+                tune_init_s, decode_state)
+    finally:
+        if own_session:
+            session.close()
 
 
 def _generate_inner(
-    model_cfg, model, params, batch, serve, coordinator,
+    model_cfg, model, params, batch, serve, session,
     prefill, decode, B, T, max_len, tuning, tune_program,
     tune_init_s, decode_state,
 ) -> dict[str, Any]:
@@ -275,7 +304,7 @@ def _generate_inner(
     logits, cache = prefill(params, batch)
     if credit_busy:
         jax.block_until_ready(logits)
-        coordinator.observe_busy(time.perf_counter() - t0)
+        session.observe_busy(time.perf_counter() - t0)
     # widen KV caches to max_len where the family uses positional caches
     full = model.init_cache(B, max_len)
     widened = []
@@ -297,12 +326,12 @@ def _generate_inner(
         # outputs are discarded, so measurement is side-effect-free.
         t_init = time.perf_counter()
         decode_state.update(cache=cache, tokens=tokens, pos=jnp.int32(pos0))
-        max_len_b = coordinator.lifecycle.bucket_length(max_len)
+        max_len_b = session.coordinator.lifecycle.bucket_length(max_len)
         decode_ev = Evaluator(
             mode="real", real_runs=1, warmup=1,
             make_args=lambda: (params, decode_state["cache"],
                                decode_state["tokens"], decode_state["pos"]))
-        decode = coordinator.register(
+        decode = session.register(
             "serve_decode", _decode_compilette(model_cfg, max_len_b),
             decode_ev,
             specialization={"max_len": max_len, "batch": B},
@@ -325,11 +354,11 @@ def _generate_inner(
                 # block_until_ready — and a busy-time budget would starve
                 # exactly the kernel tuning this credit exists to fund
                 jax.block_until_ready(tokens)
-                coordinator.observe_busy(time.perf_counter() - t_step)
+                session.observe_busy(time.perf_counter() - t_step)
             if tune_program:
                 decode_state.update(
                     cache=cache, tokens=tokens, pos=jnp.int32(pos0 + i + 1))
-            coordinator.maybe_pump()
+            session.maybe_pump()
     jax.block_until_ready(tokens)
     t_decode = time.perf_counter() - t1
 
@@ -342,12 +371,12 @@ def _generate_inner(
         "decode_tokens_per_s": B * n_new / t_decode if t_decode > 0 else 0.0,
     }
     if tuning:
-        coordinator.save_registry()
+        session.save()
         # Lifecycle pass at request end: converged tuners release the
         # evaluator closures pinning this request's params/batch/cache,
         # and tuners idle past the eviction horizon are unregistered.
-        coordinator.sweep()
+        session.sweep()
         out["tune_init_s"] = tune_init_s
-        out["kernel_tuning"] = serve.kernel_tuning
-        out["autotune"] = coordinator.stats()
+        out["kernel_tuning"] = serve.tuning.kernel_tuning
+        out["autotune"] = session.stats()
     return out

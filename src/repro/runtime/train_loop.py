@@ -7,10 +7,13 @@ regeneration-budget policy, hot-swapping the active jitted step when a
 variant measures faster. All overheads are part of the wall-clock the loop
 reports, exactly like the paper's "all run-time overheads included".
 
-Tuning is owned by the process-wide ``TuningCoordinator``: the budget is
-shared with any other tunable step-programs of the process, and the best
-points are persisted next to the checkpoints so a restarted (or
-elastically re-scaled) job warm-starts instead of re-exploring.
+Tuning is configured by the embedded :class:`~repro.api.TuningConfig`
+(``TrainLoopConfig.tuning``) and owned by a
+:class:`~repro.api.TuningSession`: the budget is shared with any other
+tunable step-programs (and, in kernel modes, the model's constituent
+catalog kernels), and the best points are persisted next to the
+checkpoints so a restarted (or elastically re-scaled) job warm-starts
+instead of re-exploring.
 
 Fault tolerance:
   * checkpoint every ``ckpt_every`` steps (atomic, retained set),
@@ -33,40 +36,76 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro.api import (
+    KERNEL_TUNING_MODES,
+    TuningConfig,
+    TuningSession,
+    apply_tuning_kwargs,
+    install_tuning_aliases,
+    train_tuning_defaults,
+)
 from repro.checkpoint.checkpointer import Checkpointer
 from repro.configs.base import ModelConfig, ShapeSpec
 from repro.core import (
-    Compilette, Evaluator, Param, RegenerationPolicy, clamped_options,
-    product_space,
+    Compilette, Evaluator, Param, clamped_options, product_space,
 )
 from repro.data.pipeline import batches_for, device_put_batch
 from repro.distributed.compression import ErrorFeedback
-from repro.models.model import build_model, model_kernel_specs
+from repro.models.model import build_model
 from repro.models.params import init_tree
 from repro.optim.adamw import AdamW, OptimizerConfig
-from repro.runtime.coordinator import TuningCoordinator
-from repro.runtime.kernel_plane import KernelTuningPlane, use_kernel_plane
+
+# legacy TrainLoopConfig field → TuningConfig field
+_TUNING_ALIASES = {
+    "autotune": "enabled",
+    "tune_max_overhead": "max_overhead",
+    "tune_invest": "invest",
+    "tune_strategy": "strategy",
+    "tune_async": "async_generation",
+    "tune_prefetch": "prefetch",
+    "kernel_tuning": "kernel_tuning",
+    "kernel_strategies": "strategies",
+}
 
 
-@dataclasses.dataclass
 class TrainLoopConfig:
-    steps: int = 50
-    ckpt_every: int = 20
-    ckpt_dir: str = "/tmp/repro_ckpt"
-    keep: int = 3
-    seed: int = 0
-    autotune: bool = False
-    tune_max_overhead: float = 0.20     # generous for short demo runs
-    tune_invest: float = 0.5
-    tune_strategy: str = "two_phase"    # repro.core.explorer registry name
-    tune_async: bool = True             # compile variants off the step path
-    tune_prefetch: int = 1              # speculative compiles per slot
-    kernel_tuning: str = "program"      # off | program | kernel | both
-    kernel_strategies: dict[str, str] | None = None  # per-kernel strategy
-    compress_grads: bool = False
-    straggler_factor: float = 3.0
-    fail_at_step: int | None = None     # fault injection (tests)
-    log_every: int = 10
+    """Loop knobs; tuning knobs live in the embedded ``tuning`` config.
+
+    The legacy flat fields (``autotune``, ``tune_strategy``,
+    ``tune_async``, …) remain accepted as constructor keywords and
+    readable/writable properties, aliasing into ``self.tuning``.
+    """
+
+    def __init__(
+        self,
+        steps: int = 50,
+        ckpt_every: int = 20,
+        ckpt_dir: str = "/tmp/repro_ckpt",
+        keep: int = 3,
+        seed: int = 0,
+        compress_grads: bool = False,
+        straggler_factor: float = 3.0,
+        fail_at_step: int | None = None,
+        log_every: int = 10,
+        tuning: TuningConfig | None = None,
+        **legacy: Any,
+    ) -> None:
+        self.steps = steps
+        self.ckpt_every = ckpt_every
+        self.ckpt_dir = ckpt_dir
+        self.keep = keep
+        self.seed = seed
+        self.compress_grads = compress_grads
+        self.straggler_factor = straggler_factor
+        self.fail_at_step = fail_at_step
+        self.log_every = log_every
+        self.tuning = tuning if tuning is not None else \
+            train_tuning_defaults()
+        apply_tuning_kwargs(self.tuning, _TUNING_ALIASES, legacy,
+                            "TrainLoopConfig")
+
+
+install_tuning_aliases(TrainLoopConfig, _TUNING_ALIASES)
 
 
 class FaultInjected(RuntimeError):
@@ -120,10 +159,11 @@ def train(
     opt_cfg: OptimizerConfig | None = None,
 ) -> dict[str, Any]:
     loop = loop or TrainLoopConfig()
-    if loop.kernel_tuning not in ("off", "program", "kernel", "both"):
+    tcfg = loop.tuning
+    if tcfg.kernel_tuning not in KERNEL_TUNING_MODES:
         raise ValueError(
             f"kernel_tuning must be off|program|kernel|both, "
-            f"got {loop.kernel_tuning!r}")
+            f"got {tcfg.kernel_tuning!r}")
     model = build_model(model_cfg)
     optimizer = AdamW(opt_cfg or OptimizerConfig(warmup_steps=10,
                                                  total_steps=loop.steps))
@@ -152,38 +192,27 @@ def train(
     first_batch = device_put_batch(next(stream))
     raw_step = jax.jit(_make_step(model, optimizer, ef, model_cfg))
 
-    coordinator = None
+    session = None
     tuner = None
-    plane = None
-    tune_program = loop.autotune and loop.kernel_tuning in ("program", "both")
-    tune_kernels = loop.autotune and loop.kernel_tuning in ("kernel", "both")
+    tune_program = tcfg.tune_program
+    tune_kernels = tcfg.tune_kernels
     if tune_program or tune_kernels:
-        # Process-wide coordinator: one regeneration budget shared by every
-        # tunable step-program AND every constituent kernel, warm-started
-        # from the checkpoint-adjacent registry so a restarted job skips
-        # re-exploration.
-        coordinator = TuningCoordinator(
-            policy=RegenerationPolicy(loop.tune_max_overhead,
-                                      loop.tune_invest),
-            registry_path=registry_path,
-            pump_every=2,
-            strategy=loop.tune_strategy,
-            # variant jitting overlaps the training steps; a resumed job
-            # whose registry warm-start re-proposes known points hits the
-            # generation cache instead of re-building the step program
-            async_generation=loop.tune_async,
-            prefetch=loop.tune_prefetch,
-        )
+        # One session per training process: a single regeneration budget
+        # shared by every tunable step-program AND every constituent
+        # kernel, warm-started from the checkpoint-adjacent registry so
+        # a restarted job skips re-exploration. Variant jitting overlaps
+        # the training steps; a resumed job whose registry warm-start
+        # re-proposes known points hits the generation cache instead of
+        # re-building the step program.
+        if tcfg.registry_path is None:
+            tcfg = dataclasses.replace(tcfg, registry_path=registry_path)
+        session = TuningSession(tcfg)
     if tune_kernels:
         # Hierarchical registration, kernel level: each Pallas kernel of
         # the step-program tunes as an independent compilette under the
         # shared budget (untunable reduced shapes are skipped).
-        plane = KernelTuningPlane(
-            coordinator, strategies=loop.kernel_strategies,
-            adopt_points=not tune_program)
         B_k, T_k = first_batch["tokens"].shape
-        for name, spec in model_kernel_specs(model_cfg, batch=B_k, seq=T_k):
-            plane.register_spec(name, spec, require=False)
+        session.attach_kernels(model_cfg, batch=B_k, seq=T_k)
     if tune_program:
         comp = _attention_step_compilette(
             model_cfg, model, optimizer, ef, first_batch, shape.seq_len)
@@ -191,7 +220,7 @@ def train(
         evaluator = Evaluator(
             mode="real", real_runs=2, warmup=1,
             make_args=lambda: (params, opt_state, ef_state, first_batch))
-        tuner = coordinator.register(
+        tuner = session.register(
             "train_step_attn", comp, evaluator,
             specialization=spec, reference_fn=raw_step,
         )
@@ -203,9 +232,9 @@ def train(
     t_start = time.perf_counter()
     step = start_step
     batch = first_batch
-    plane_ctx = (use_kernel_plane(plane) if plane is not None
-                 else contextlib.nullcontext())
-    with plane_ctx:
+    scope_ctx = session.scope() if session is not None \
+        else contextlib.nullcontext()
+    with scope_ctx:
         while step < loop.steps:
             if loop.fail_at_step is not None and step == loop.fail_at_step:
                 raise FaultInjected(f"injected failure at step {step}")
@@ -214,8 +243,8 @@ def train(
             loss, params, opt_state, ef_state, gnorm = fn(
                 params, opt_state, ef_state, batch)
             loss = float(loss)
-            if coordinator is not None:
-                coordinator.maybe_pump()
+            if session is not None:
+                session.maybe_pump()
             dt = time.perf_counter() - t0
             durations.append(dt)
             if len(durations) >= 5:
@@ -227,8 +256,8 @@ def train(
             if step % loop.ckpt_every == 0 or step == loop.steps:
                 ckpt.save(step, {"params": params, "opt": opt_state},
                           extra={"loss": loss})
-                if coordinator is not None:
-                    coordinator.save_registry()
+                if session is not None:
+                    session.save()
             batch = device_put_batch(next(stream))
 
     wall = time.perf_counter() - t_start
@@ -243,7 +272,7 @@ def train(
     }
     if tuner is not None:
         out["autotune"] = tuner.stats()
-    if coordinator is not None:
-        coordinator.close()
-        out["coordinator"] = coordinator.stats()
+    if session is not None:
+        session.close()
+        out["coordinator"] = session.stats()
     return out

@@ -85,7 +85,9 @@ def test_cache_hit_skips_generate_and_costs_nothing():
     assert b.meta["compiled_in_s"] == GEN_COST   # provenance kept
     assert b.fn is a.fn                          # the SAME executable
     assert comp.compiles["n"] == 1               # _generate ran once, ever
-    assert cache.stats() == {"entries": 1, "hits": 1, "misses": 1,
+    from repro.core import DEFAULT_ENTRY_BYTES
+    assert cache.stats() == {"entries": 1, "bytes": DEFAULT_ENTRY_BYTES,
+                             "max_bytes": None, "hits": 1, "misses": 1,
                              "evictions": 0, "hit_rate": 0.5}
 
 

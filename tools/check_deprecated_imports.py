@@ -1,0 +1,71 @@
+#!/usr/bin/env python
+"""Fail on new imports of deprecated tuning constructors.
+
+PR 5's session API (``repro.api``) is the single front door to the
+tuning machinery: runtime and launch modules must construct through
+``repro.TuningSession``, never ``TuningCoordinator`` /
+``KernelTuningPlane`` / ``make_serve_coordinator`` directly. pyflakes
+keeps ``src/`` clean of unused imports; this companion check makes the
+*specific* deprecated imports fail CI (and the tier-1 suite, via
+``tests/test_api.py``) so the collapsed entry points cannot creep back
+into ``src/repro/runtime/`` or ``src/repro/launch/``.
+"""
+
+from __future__ import annotations
+
+import ast
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+SCOPES = ("src/repro/runtime", "src/repro/launch")
+FORBIDDEN = {
+    "TuningCoordinator",
+    "KernelTuningPlane",
+    "make_serve_coordinator",
+}
+# the modules that define the machinery itself (the plane module imports
+# the coordinator it manages)
+ALLOWED_FILES = {
+    "src/repro/runtime/coordinator.py",
+    "src/repro/runtime/kernel_plane.py",
+}
+
+
+def violations(root: pathlib.Path = ROOT) -> list[str]:
+    out: list[str] = []
+    for scope in SCOPES:
+        for path in sorted((root / scope).rglob("*.py")):
+            rel = path.relative_to(root).as_posix()
+            if rel in ALLOWED_FILES:
+                continue
+            tree = ast.parse(path.read_text(), filename=rel)
+            for node in ast.walk(tree):
+                if isinstance(node, ast.ImportFrom):
+                    names = [a.name for a in node.names]
+                elif isinstance(node, ast.Import):
+                    names = [a.name.rsplit(".", 1)[-1] for a in node.names]
+                else:
+                    continue
+                for name in names:
+                    if name in FORBIDDEN:
+                        out.append(
+                            f"{rel}:{node.lineno}: imports deprecated "
+                            f"constructor {name!r} — go through "
+                            f"repro.TuningSession (repro/api.py)")
+    return out
+
+
+def main() -> int:
+    found = violations()
+    for line in found:
+        print(line)
+    if found:
+        return 1
+    print("ok: no deprecated-constructor imports under "
+          + " or ".join(SCOPES))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
