@@ -687,6 +687,24 @@ class TuningSession:
 
         return wrap if fn is None else wrap(fn)
 
+    # --------------------------------------------------------------- replay
+    def replay(self, trace: Any,
+               configs: Mapping[str, Any] | None = None,
+               **kwargs: Any) -> dict[str, Any]:
+        """Re-serve a scripted traffic trace, deterministically.
+
+        The session-API entry to the :mod:`repro.bench.replay` harness:
+        advances this session's (virtual) clock through the trace's
+        arrivals, serves each request via the attached kernel handles
+        (feeding per-call ``observe_latency`` through the managed
+        tuners and ``observe_busy`` credits for scripted host work),
+        and returns the per-tenant latency/speedup and session-level
+        overhead report. See :func:`repro.bench.replay.replay`.
+        """
+        from repro.bench.replay import replay as _replay
+
+        return _replay(self, trace, configs, **kwargs)
+
     # -------------------------------------------------------------- kernels
     def attach_kernels(self, model_cfg: Any, *, batch: int, seq: int,
                        max_len: int | None = None,

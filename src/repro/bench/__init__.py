@@ -1,0 +1,52 @@
+"""Deterministic workload benchmarking layer (traffic replay).
+
+``repro.bench.replay`` synthesizes seeded, virtual-clock traffic traces
+(Poisson/bursty arrivals, long-tail prompt and cache-length mixes, ramp
+and phase-change patterns, multi-tenant interleaving) and re-serves them
+through a :class:`repro.api.TuningSession` — the repo's fleet-scale
+analogue of the paper's fig7 workload study.
+"""
+
+from repro.bench.replay import (
+    Request,
+    Scenario,
+    Trace,
+    bursty_arrivals,
+    choice_mix,
+    fixed_mix,
+    fleet_scenarios,
+    longtail_mix,
+    make_trace,
+    merge_traces,
+    phase_arrivals,
+    phase_mix,
+    poisson_arrivals,
+    ramp_arrivals,
+    reference_request_cost_s,
+    replay,
+    replay_scenario,
+    replay_session,
+    replay_tuning_defaults,
+)
+
+__all__ = [
+    "Request",
+    "Scenario",
+    "Trace",
+    "bursty_arrivals",
+    "choice_mix",
+    "fixed_mix",
+    "fleet_scenarios",
+    "longtail_mix",
+    "make_trace",
+    "merge_traces",
+    "phase_arrivals",
+    "phase_mix",
+    "poisson_arrivals",
+    "ramp_arrivals",
+    "reference_request_cost_s",
+    "replay",
+    "replay_scenario",
+    "replay_session",
+    "replay_tuning_defaults",
+]

@@ -31,6 +31,7 @@ deterministic function of simulated costs (used by tests/benchmarks).
 from __future__ import annotations
 
 import dataclasses
+import math
 import threading
 import time
 from typing import Any, Callable, Sequence
@@ -209,6 +210,35 @@ class OnlineAutotuner:
         """A requested variant is still compiling in the background."""
         return self._pending is not None and not self._pending.done
 
+    def _candidate_cost_estimate(self) -> float:
+        """Cost-model prediction of the next regeneration's full charge.
+
+        The budget gate otherwise estimates with the ACTIVE kernel's
+        cost EWMA, which understates candidates slower than the
+        incumbent — each admission can overshoot the shared budget by
+        the difference, and the overshoots accumulate. When the
+        compilette carries a cost model and a virtual profile, the
+        upcoming candidate's generation + evaluation cost is knowable
+        in advance; real backends (no model) keep the EWMA estimate.
+        """
+        comp = self.compilette
+        virtual = getattr(comp, "virtual", None)
+        if virtual is None or getattr(comp, "cost_model", None) is None:
+            return 0.0
+        peeked = self.explorer.peek(1)
+        if not peeked:
+            return 0.0
+        point = peeked[0]
+        try:
+            gen = comp._simulated_cost(point, self.specialization) or 0.0
+            est = gen + comp.simulate(
+                point, virtual[1], **self.specialization)
+        except Exception:
+            return 0.0
+        # a hole candidate priced at inf must still be admitted so the
+        # normal cycle can report it and move on — never gate on it
+        return est if math.isfinite(est) else 0.0
+
     def wake(self) -> bool:
         """One wake-up of the tuning thread. Returns True if it swapped.
 
@@ -242,6 +272,7 @@ class OnlineAutotuner:
             self._update_gains()
             now = self._clock()
             estimate = self._cost_ema if self._cost_ema is not None else 0.0
+            estimate = max(estimate, self._candidate_cost_estimate())
             gate = self._budget_gate or self.policy.should_regenerate
             if not gate(self.accounts, now, estimate):
                 return False

@@ -285,6 +285,24 @@ class TwoPhaseExplorer(SearchStrategy):
         super().__init__(space, base_point=base_point, seed_points=seed_points)
         self._phase1_iter = self._make_phase1_iter()
         self._phase2_iter: Iterator[Point] | None = None
+        self._peek_holds_phase = False
+
+    def peek(self, n: int = 1) -> list[Point]:
+        """Peek, but never across an undetermined phase boundary.
+
+        Phase 2 enumerates around the phase-1 *best*; while phase-1
+        measurements are outstanding that best is not yet decided, and a
+        peeked phase-2 candidate would be pinned to a stale incumbent
+        (the coordinator's prefetch peeks routinely, so this is a live
+        production path, not a test artifact). Returning fewer points is
+        always legal for peek; the boundary is crossed on the next peek
+        or proposal after the last phase-1 report lands.
+        """
+        self._peek_holds_phase = True
+        try:
+            return super().peek(n)
+        finally:
+            self._peek_holds_phase = False
 
     def _make_phase1_iter(self) -> Iterator[Point]:
         # Enumerate in least→most switched order, then stable-sort by
@@ -313,6 +331,11 @@ class TwoPhaseExplorer(SearchStrategy):
                 return next(it)
             except StopIteration:
                 if self.state.phase == 1:
+                    outstanding = (self.state.n_proposed + len(self._peeked)
+                                   > self.state.n_reported)
+                    if self._peek_holds_phase and outstanding:
+                        # peek stops at the boundary (see peek docstring)
+                        return None
                     if self.best_point is None:
                         # nothing valid at all
                         return None

@@ -373,7 +373,11 @@ class TuningCoordinator:
         (an over-SLO prefill must not starve a fast decode step forever);
         a shared-budget denial instead ends the slot, so accruing budget
         stays earmarked for the most valuable kernel rather than leaking
-        to cheaper, lower-value ones.
+        to cheaper, lower-value ones. The one exception: when the budget
+        still has headroom at the kernel's own cost EWMA, the denial was
+        its next *candidate's* predicted cost (cost-model compilettes
+        gate on it) — an individually unaffordable variant passes the
+        slot instead of freezing every other kernel behind it.
 
         With async generation a productive wake is either a *request*
         (next variant submitted to the background executor) or a
@@ -407,9 +411,17 @@ class TuningCoordinator:
             # signal intact — resetting it would starve exactly the
             # kernel we judged most valuable
             est = t._cost_ema or 0.0
-            if self.policy.headroom_allows(t.accounts, est):
-                return False   # shared-budget denial: slot ends
-            continue           # per-kernel headroom freeze: next
+            if not self.policy.headroom_allows(t.accounts, est):
+                continue       # per-kernel headroom freeze: next
+            candidate = t._candidate_cost_estimate()
+            if candidate > est and self._shared_budget_gate(
+                    t.accounts, self.clock(), est):
+                # budget has headroom at this kernel's own cost EWMA: the
+                # denial was its next CANDIDATE's predicted cost — a
+                # per-kernel condition, so pass the slot rather than
+                # freezing the whole fleet behind one expensive variant
+                continue
+            return False       # shared-budget denial: slot ends
         return False
 
     # ----------------------------------------------------------- prefetch

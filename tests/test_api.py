@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from hypothesis import given, settings, strategies as st
 
 import repro
 from repro.api import TuningConfig, TuningSession
@@ -274,6 +275,105 @@ def test_config_validation_fails_fast():
         TuningConfig.from_flags(args)
 
 
+# -------------------------------------------- config round-trip properties
+# one random assignment of every flag-covered knob; slo_quantile is
+# normalized onto slo_s (from_flags rejects a quantile without an SLO)
+_KNOB_ASSIGNMENTS = st.tuples(
+    st.booleans(),                                          # enabled
+    st.sampled_from(["two_phase", "random", "greedy"]),     # strategy
+    st.sampled_from(["off", "program", "kernel", "both"]),  # kernel_tuning
+    st.dictionaries(                                        # strategies
+        st.sampled_from(["matmul", "attention", "rmsnorm"]),
+        st.sampled_from(["two_phase", "random", "greedy"]),
+        min_size=0, max_size=3),
+    st.floats(min_value=0.0, max_value=1.0),                # max_overhead
+    st.floats(min_value=0.0, max_value=1.0),                # invest
+    st.sampled_from([None, "/tmp/api_prop_reg.json"]),      # registry_path
+    st.sampled_from([None, 0.01, 0.25]),                    # slo_s
+    st.sampled_from([None, 0.5, 0.99]),                     # slo_quantile
+    st.booleans(),                                          # seq_buckets
+    st.booleans(),                                          # async_generation
+    st.integers(min_value=0, max_value=4),                  # prefetch
+)
+
+
+@settings(max_examples=25)
+@given(_KNOB_ASSIGNMENTS)
+def test_config_round_trips_for_random_knobs(knobs):
+    """Property: programmatic == from_env == from_flags for ANY knob
+    assignment, not just the single hand-picked example above."""
+    (enabled, strategy, kernel_tuning, strategies, max_overhead, invest,
+     registry_path, slo_s, slo_quantile, seq_buckets, async_generation,
+     prefetch) = knobs
+    if slo_s is None:
+        slo_quantile = None
+    strategies = strategies or None       # {} and None parse identically
+
+    base = TuningConfig(enabled=False)
+    cfg_prog = TuningConfig(
+        enabled=enabled, strategy=strategy, kernel_tuning=kernel_tuning,
+        strategies=strategies, max_overhead=max_overhead, invest=invest,
+        registry_path=registry_path, slo_s=slo_s, slo_quantile=slo_quantile,
+        seq_buckets=seq_buckets, async_generation=async_generation,
+        prefetch=prefetch)
+
+    env = {
+        "REPRO_TUNE_AUTOTUNE": "1" if enabled else "0",
+        "REPRO_TUNE_STRATEGY": strategy,
+        "REPRO_TUNE_KERNEL_TUNING": kernel_tuning,
+        "REPRO_TUNE_STRATEGIES": ",".join(
+            f"{k}={v}" for k, v in (strategies or {}).items()),
+        "REPRO_TUNE_MAX_OVERHEAD": repr(max_overhead),
+        "REPRO_TUNE_INVEST": repr(invest),
+        "REPRO_TUNE_REGISTRY_PATH": registry_path or "",
+        "REPRO_TUNE_SLO_S": "" if slo_s is None else repr(slo_s),
+        "REPRO_TUNE_SLO_QUANTILE": (
+            "" if slo_quantile is None else repr(slo_quantile)),
+        "REPRO_TUNE_SEQ_BUCKETS": "1" if seq_buckets else "0",
+        "REPRO_TUNE_ASYNC_GENERATION": "true" if async_generation else "no",
+        "REPRO_TUNE_PREFETCH": str(prefetch),
+    }
+    assert TuningConfig.from_env(env, base=base) == cfg_prog
+
+    argv = []
+    if enabled:
+        argv.append("--autotune")
+    argv += ["--strategy", strategy, "--kernel-tuning", kernel_tuning]
+    for k, v in (strategies or {}).items():
+        argv += ["--kernel-strategy", f"{k}={v}"]
+    argv += ["--tune-overhead", repr(max_overhead),
+             "--tune-invest", repr(invest),
+             "--prefetch", str(prefetch)]
+    if registry_path is not None:
+        argv += ["--registry", registry_path]
+    if slo_s is not None:
+        argv += ["--slo", repr(slo_s)]
+    if slo_quantile is not None:
+        argv += ["--slo-quantile", repr(slo_quantile)]
+    argv.append("--seq-buckets" if seq_buckets else "--no-seq-buckets")
+    if not async_generation:
+        argv.append("--sync-generation")
+    parser = argparse.ArgumentParser()
+    TuningConfig.add_flags(parser, base=base)
+    assert TuningConfig.from_flags(parser.parse_args(argv), base=base) \
+        == cfg_prog
+
+
+@settings(max_examples=25)
+@given(st.sampled_from(["BUDGET", "OVERHEAD", "MAX_OVERHED", "STRATGY",
+                        "PUMP", "CACHE", "EVICT"]),
+       st.integers(min_value=0, max_value=99))
+def test_config_from_env_unknown_keys_always_raise(stem, suffix):
+    """Property: a typo'd REPRO_TUNE_* knob never parses silently, even
+    next to perfectly valid keys."""
+    env = {
+        "REPRO_TUNE_STRATEGY": "greedy",          # valid
+        f"REPRO_TUNE_{stem}{suffix}": "1",        # never a field name
+    }
+    with pytest.raises(ValueError, match="unknown tuning variable"):
+        TuningConfig.from_env(env)
+
+
 # -------------------------------------------------------- close/scope fix
 def test_session_close_exactly_once_under_reentrant_scopes():
     """Regression (PR-5 satellite): nested scope() exits and repeated
@@ -473,7 +573,59 @@ def test_decode_attention_tunes_per_cache_length_bucket():
     assert len(plane.handles("decode_attention")) == 2
     assert {m.specialization["S"]
             for m in plane.handles("decode_attention")} == {256, 1024}
-    session.close()
+
+
+def test_decode_attention_bucket_registry_keys_never_collide():
+    """Regression: every cache-length bucket persists under its OWN
+    registry key — no max_len pair may alias one entry — and a second
+    session warm-starts each bucket from its own best independently."""
+    model_cfg = REGISTRY["deepseek-7b"].reduced()
+    registry = TunedRegistry()
+    max_lens = (300, 1000, 5000)          # buckets 256 / 1024 / 4096
+
+    def run_session():
+        clock = VirtualClock()
+        cfg = TuningConfig(max_overhead=1.0, invest=0.5, pump_every=1)
+        session = TuningSession(
+            cfg, clock=clock, device="test:v", registry=registry,
+            virtual=(clock, TPU_V5E), gen_cost_s=GEN_COST,
+            evaluator_factory=lambda c: VirtualClockEvaluator(clock))
+        plane = None
+        for max_len in max_lens:
+            plane = session.attach_kernels(
+                model_cfg, batch=2, seq=24, max_len=max_len)
+        handles = plane.handles("decode_attention")
+        for step in range(4000):
+            for h in handles:
+                h(step)
+            clock.advance(0.001)
+            session.pump()
+            if all(h.tuner.explorer.finished for h in handles):
+                break
+        by_bucket = {h.specialization["S"]: h for h in handles}
+        session.close()                   # flushes bests to the registry
+        return by_bucket
+
+    cold = run_session()
+    assert sorted(cold) == [256, 1024, 4096]
+
+    # distinct buckets -> distinct registry keys (the collision would
+    # silently share one tuned point across every cache length)
+    keys = {S: TunedRegistry.key("decode_attention",
+                                 dict(h.specialization), "test:v")
+            for S, h in cold.items()}
+    assert len(set(keys.values())) == len(max_lens)
+    # and each key resolves to ITS bucket's best, not a shared one
+    for S, h in cold.items():
+        assert h.tuner.explorer.finished
+        entry = registry.get("decode_attention",
+                             dict(h.specialization), "test:v")
+        assert entry == h.tuner.explorer.best_point, S
+
+    warm = run_session()
+    for S, h in warm.items():
+        assert h.warm_started, S
+        assert h.tuner.explorer.best_point == cold[S].tuner.explorer.best_point
 
 
 # ------------------------------------------------------- cache byte bound

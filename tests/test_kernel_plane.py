@@ -272,7 +272,10 @@ def test_kernel_handles_warm_start_from_registry():
             generation_cache=cache)
         plane = make_virtual_plane(clock, coord)
         h = plane.register_spec("rmsnorm", SPECS["rmsnorm"])
-        for i in range(800):
+        # the budget gate paces regenerations at the candidate's full
+        # predicted cost (gen + eval), so exhausting the space takes
+        # ~space_size * gen_cost / per-call-cost iterations
+        for i in range(6000):
             h(i)
             coord.pump()
             if h.tuner.explorer.finished:
