@@ -47,7 +47,11 @@ import os
 import threading
 from typing import Any, Callable, Mapping
 
-from repro.core.compilette import Compilette, GenerationCache
+from repro.core.compilette import (
+    Compilette,
+    GenerationCache,
+    device_free_memory_bytes,
+)
 from repro.core.decision import LatencyHeadroomGate, RegenerationPolicy
 from repro.core.evaluator import Evaluator
 from repro.core.tuning_space import TuningSpace
@@ -60,6 +64,7 @@ from repro.runtime.kernel_plane import (
 from repro.runtime.lifecycle import TunerLifecycle, TunerState
 
 __all__ = [
+    "COMPILE_BACKENDS",
     "KERNEL_TUNING_MODES",
     "TunedFunction",
     "TuningConfig",
@@ -75,6 +80,10 @@ __all__ = [
 ]
 
 KERNEL_TUNING_MODES = ("off", "program", "kernel", "both")
+# compile-farm backends: "auto" keeps the clock-based pick (virtual clock
+# -> deterministic "manual" batches, real clock -> worker threads);
+# "process" opts into child-process compiles for GIL-free serving.
+COMPILE_BACKENDS = ("auto", "thread", "process", "manual")
 
 
 def _canon(spec: Mapping[str, Any]) -> str:
@@ -107,6 +116,8 @@ class TuningConfig:
     pump_every: int = 8               # app calls between tuning slots
     async_generation: bool = True     # compile variants off the hot path
     prefetch: int = 1                 # speculative compiles per slot
+    compile_workers: int = 1          # compile-farm pool size (M)
+    compile_backend: str = "auto"     # auto | thread | process | manual
     kernel_tuning: str = "program"    # off | program | kernel | both
     cache_entries: int | None = 256   # generation-cache entry bound
     cache_bytes: int | None = None    # generation-cache byte bound
@@ -120,6 +131,13 @@ class TuningConfig:
             raise ValueError(
                 f"budget_from must be 'wall' or 'busy', "
                 f"got {self.budget_from!r}")
+        if self.compile_backend not in COMPILE_BACKENDS:
+            raise ValueError(
+                f"compile_backend must be one of {COMPILE_BACKENDS}, "
+                f"got {self.compile_backend!r}")
+        if self.compile_workers < 1:
+            raise ValueError(
+                f"compile_workers must be >= 1, got {self.compile_workers}")
 
     # -------------------------------------------------------- derived views
     @property
@@ -156,7 +174,7 @@ class TuningConfig:
                     "async_generation")
     _FLOAT_FIELDS = ("max_overhead", "invest")
     _OPT_FLOAT_FIELDS = ("slo_s", "slo_quantile", "idle_evict_s")
-    _INT_FIELDS = ("pump_every", "prefetch")
+    _INT_FIELDS = ("pump_every", "prefetch", "compile_workers")
     _OPT_INT_FIELDS = ("cache_entries", "cache_bytes")
     _OPT_STR_FIELDS = ("registry_path",)
     # environment/CLI spellings that map onto differently named fields
@@ -279,6 +297,16 @@ class TuningConfig:
                             "cycle) instead of the background pipeline")
         g.add_argument("--prefetch", type=int, default=base.prefetch,
                        help="speculative compiles per tuning slot (0=off)")
+        g.add_argument("--compile-workers", type=int,
+                       default=base.compile_workers,
+                       help="compile-farm pool size: background variant "
+                            "compiles running concurrently")
+        g.add_argument("--compile-backend", default=base.compile_backend,
+                       choices=list(COMPILE_BACKENDS),
+                       help="compile-farm backend: auto picks threads "
+                            "(or deterministic manual batches under a "
+                            "virtual clock); process isolates compiles "
+                            "in child processes")
         return parser
 
     @classmethod
@@ -316,6 +344,8 @@ class TuningConfig:
             seq_buckets=args.seq_buckets,
             async_generation=args.async_generation,
             prefetch=args.prefetch,
+            compile_workers=args.compile_workers,
+            compile_backend=args.compile_backend,
         )
 
 
@@ -569,6 +599,12 @@ class TuningSession:
             self.coordinator = coordinator
         else:
             cfg = self.config
+            # the backend knob refines async generation: "auto" keeps the
+            # coordinator's clock-based pick, an explicit backend forces
+            # the farm mode (sync generation ignores both)
+            async_generation: "bool | str" = (
+                cfg.async_generation if cfg.compile_backend == "auto"
+                else (cfg.async_generation and cfg.compile_backend))
             self.coordinator = TuningCoordinator(
                 policy=cfg.policy(),
                 registry=registry,
@@ -578,12 +614,18 @@ class TuningSession:
                 pump_every=cfg.pump_every,
                 lifecycle=cfg.lifecycle(),
                 strategy=cfg.strategy,
-                async_generation=cfg.async_generation,
+                async_generation=async_generation,
                 generation_cache=(
                     generation_cache if generation_cache is not None
-                    else GenerationCache(max_entries=cfg.cache_entries,
-                                         max_bytes=cfg.cache_bytes)),
+                    else GenerationCache(
+                        max_entries=cfg.cache_entries,
+                        max_bytes=cfg.cache_bytes,
+                        # live device-memory pressure shrinks the byte
+                        # bound; on CPU/virtual backends the probe has no
+                        # signal and the static bound applies unchanged
+                        free_memory_fn=device_free_memory_bytes)),
                 prefetch=cfg.prefetch,
+                compile_workers=cfg.compile_workers,
             )
         self.coordinator._session = self
         self._plane: KernelTuningPlane | None = getattr(

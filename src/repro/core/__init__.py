@@ -4,13 +4,14 @@ Public API re-exports.
 """
 
 from repro.core.autotuner import OnlineAutotuner
+from repro.core.compile_farm import AsyncGenerator, CompileFarm
 from repro.core.compilette import (
     DEFAULT_ENTRY_BYTES,
-    AsyncGenerator,
     Compilette,
     GeneratedKernel,
     GenerationCache,
     GenerationTicket,
+    device_free_memory_bytes,
     executable_bytes,
 )
 from repro.core.decision import (
@@ -58,11 +59,13 @@ from repro.core.tuning_space import (
 __all__ = [
     "OnlineAutotuner",
     "AsyncGenerator",
+    "CompileFarm",
     "Compilette",
     "DEFAULT_ENTRY_BYTES",
     "GeneratedKernel",
     "GenerationCache",
     "GenerationTicket",
+    "device_free_memory_bytes",
     "executable_bytes",
     "LatencyHeadroomGate",
     "LatencyHistogram",

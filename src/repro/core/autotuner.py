@@ -36,8 +36,8 @@ import threading
 import time
 from typing import Any, Callable, Sequence
 
+from repro.core.compile_farm import CompileFarm
 from repro.core.compilette import (
-    AsyncGenerator,
     Compilette,
     GeneratedKernel,
     GenerationTicket,
@@ -82,7 +82,7 @@ class OnlineAutotuner:
         explorer: SearchStrategy | None = None,
         clock: Callable[[], float] | None = None,
         budget_gate: BudgetGate | None = None,
-        generator: AsyncGenerator | None = None,
+        generator: CompileFarm | None = None,
     ) -> None:
         self.compilette = compilette
         self.evaluator = evaluator
@@ -95,6 +95,10 @@ class OnlineAutotuner:
         # the current active_fn serving until the compile is ready.
         self._generator = generator
         self._pending: GenerationTicket | None = None
+        # Scheduling priority the coordinator computed when it granted
+        # this tuner the slot; passed through to the compile farm so the
+        # farm's queue preserves the scheduler's gain ordering.
+        self.submit_priority: float = 0.0
         # EWMA of real per-call latency (fed by ManagedTuner.__call__ via
         # observe_latency); None until the first observation. The
         # histogram beside it estimates the tail: when the policy's
@@ -282,7 +286,8 @@ class OnlineAutotuner:
             # -- request: pipelined generation (double buffering) --------
             if self._generator is not None:
                 ticket = self._generator.submit(
-                    self.compilette, point, self.specialization)
+                    self.compilette, point, self.specialization,
+                    priority=self.submit_priority)
                 self.accounts.gen_requests += 1
                 if not ticket.done:
                     self._pending = ticket

@@ -25,14 +25,15 @@ Two pieces take generation cost OFF the application hot path:
     time instead of recompiling. The cache is owned by the process-wide
     ``TuningCoordinator`` (one per process), so entries survive tuner
     retirement and re-registration.
-  * :class:`AsyncGenerator` — a single background compile executor (the
-    coordinator's analogue of the paper's "new version in a code buffer"
-    double-buffering): the tuning wake *requests* a variant and keeps the
-    current active function serving until the compiled candidate is
-    ready. In ``"thread"`` mode one worker thread compiles; in
-    ``"manual"`` mode jobs complete only at explicit ``run_pending()``
-    calls, which is what makes the pipeline deterministically testable
-    under a :class:`~repro.core.VirtualClock` (no sleeps).
+  * :class:`~repro.core.compile_farm.CompileFarm` — the background
+    compile pool (the coordinator's analogue of the paper's "new version
+    in a code buffer" double-buffering): the tuning wake *requests* a
+    variant and keeps the current active function serving until the
+    compiled candidate is ready. In ``"thread"`` mode worker threads
+    compile; in ``"manual"`` mode jobs complete only at explicit
+    ``run_pending()`` calls, which is what makes the pipeline
+    deterministically testable under a :class:`~repro.core.VirtualClock`
+    (no sleeps).
 """
 
 from __future__ import annotations
@@ -40,7 +41,6 @@ from __future__ import annotations
 import collections
 import dataclasses
 import itertools
-import queue
 import threading
 import time
 from typing import Any, Callable, Mapping
@@ -71,6 +71,28 @@ class GeneratedKernel:
 # SOMETHING per entry or unknown-size entries would make the bound a
 # no-op.
 DEFAULT_ENTRY_BYTES = 64 * 1024
+
+
+def device_free_memory_bytes() -> int | None:
+    """Free bytes on the default accelerator, or ``None`` when unknowable.
+
+    Read from the device's ``memory_stats()`` (``bytes_limit`` minus
+    ``bytes_in_use``); CPU backends and older jaxlibs report nothing and
+    return ``None``, which callers treat as "no live pressure signal".
+    """
+    try:
+        import jax
+
+        stats = jax.local_devices()[0].memory_stats()
+        if not stats:
+            return None
+        limit = stats.get("bytes_limit")
+        used = stats.get("bytes_in_use")
+        if limit is None or used is None:
+            return None
+        return max(int(limit) - int(used), 0)
+    except Exception:
+        return None
 
 
 def executable_bytes(fn: Callable[..., Any]) -> int | None:
@@ -126,23 +148,41 @@ class GenerationCache:
     resident until displaced (evicting it on arrival would make the
     cache useless for exactly the kernels it exists to keep).
 
+    **Live memory pressure.** ``max_bytes`` is a static estimate; the
+    device the executables actually pin is shared with activations and
+    weights whose footprint the cache cannot predict. When a
+    ``free_memory_fn`` is provided (the session wires
+    :func:`device_free_memory_bytes`), every ``put`` re-derives the
+    effective byte bound as ``min(max_bytes, memory_headroom_frac x
+    free_device_bytes)`` — under pressure the cache shrinks itself
+    before the allocator OOMs, and when the probe has no signal (CPU
+    backends, virtual clocks) the static ``max_bytes`` bound applies
+    unchanged. Evictions forced by the dynamic bound alone are counted
+    in ``pressure_evictions``.
+
     Thread-safe: the coordinator's tuning thread, the async compile
     worker, and the application thread may all hit it concurrently.
     """
 
     def __init__(self, max_entries: int | None = None,
                  evict_window: int = 8,
-                 max_bytes: int | None = None) -> None:
+                 max_bytes: int | None = None,
+                 free_memory_fn: Callable[[], int | None] | None = None,
+                 memory_headroom_frac: float = 0.5) -> None:
         self._table: "collections.OrderedDict[tuple, GeneratedKernel]" = (
             collections.OrderedDict())
         self._mu = threading.Lock()
         self.max_entries = max_entries
         self.max_bytes = max_bytes
+        self.free_memory_fn = free_memory_fn
+        self.memory_headroom_frac = float(memory_headroom_frac)
         self.evict_window = max(int(evict_window), 1)
         self._bytes = 0
+        self._effective_max_bytes = max_bytes
         self.hits = 0
         self.misses = 0
         self.evictions = 0
+        self.pressure_evictions = 0
 
     @staticmethod
     def key(
@@ -176,21 +216,43 @@ class GenerationCache:
         size = kern.meta.get("size_bytes")
         return int(size) if size else DEFAULT_ENTRY_BYTES
 
-    def _over_bounds(self) -> bool:
+    def _byte_bound(self) -> int | None:
+        """The byte bound in force for this put: static cap shrunk by
+        live device-memory pressure when the probe has a signal."""
+        free = None
+        if self.free_memory_fn is not None:
+            try:
+                free = self.free_memory_fn()
+            except Exception:
+                free = None
+        if free is None:
+            return self.max_bytes          # no signal: static estimate
+        dynamic = int(free * self.memory_headroom_frac)
+        if self.max_bytes is None:
+            return dynamic
+        return min(self.max_bytes, dynamic)
+
+    def _over_bounds(self, byte_bound: int | None) -> bool:
         return (
             (self.max_entries is not None
              and len(self._table) > self.max_entries)
-            or (self.max_bytes is not None and self._bytes > self.max_bytes)
+            or (byte_bound is not None and self._bytes > byte_bound)
         )
 
     def put(self, key: tuple, kern: GeneratedKernel) -> None:
         with self._mu:
+            byte_bound = self._effective_max_bytes = self._byte_bound()
+            # an eviction within the static bound can only have been
+            # forced by the pressure-shrunk dynamic bound
+            pressured = (byte_bound is not None
+                         and (self.max_bytes is None
+                              or byte_bound < self.max_bytes))
             old = self._table.pop(key, None)
             if old is not None:
                 self._bytes -= self._entry_bytes(old)
             self._table[key] = kern
             self._bytes += self._entry_bytes(kern)
-            while self._over_bounds():
+            while self._over_bounds(byte_bound):
                 if len(self._table) == 1:
                     if self.max_entries is not None and self.max_entries < 1:
                         # max_entries=0 (caching disabled): nothing can stay
@@ -209,6 +271,10 @@ class GenerationCache:
                 window = itertools.islice(
                     self._table.items(),
                     min(self.evict_window, len(self._table) - 1))
+                if pressured and not self._over_bounds(self.max_bytes):
+                    # within every static bound: only the pressure-shrunk
+                    # dynamic bound forced this victim out
+                    self.pressure_evictions += 1
                 victim, evicted = min(
                     window, key=lambda kv: self._regen_cost(kv[1]))
                 del self._table[victim]
@@ -235,9 +301,11 @@ class GenerationCache:
                 "entries": len(self._table),
                 "bytes": self._bytes,
                 "max_bytes": self.max_bytes,
+                "effective_max_bytes": self._effective_max_bytes,
                 "hits": self.hits,
                 "misses": self.misses,
                 "evictions": self.evictions,
+                "pressure_evictions": self.pressure_evictions,
                 "hit_rate": self.hits / total if total else 0.0,
             }
 
@@ -288,6 +356,11 @@ class Compilette:
         # compiled variants + the device fingerprint that keys it.
         self.cache: GenerationCache | None = None
         self.cache_device: str = "uncached"
+        # Extra identity a compilette contributes to the *persistence*
+        # fingerprint (appended to the device key by the coordinator).
+        # KernelCompilette sets "src-<hash>" of its ops.py so editing a
+        # kernel's source invalidates exactly that kernel's warm starts.
+        self.fingerprint_extra: str | None = None
 
     # ------------------------------------------------------------- caching
     def attach_cache(self, cache: GenerationCache | None,
@@ -373,6 +446,11 @@ class GenerationTicket:
     point: Point
     specialization: dict[str, Any]
     speculative: bool = False
+    # scheduling inputs (set at submit): the farm pops highest priority
+    # first, non-speculative before speculative at equal priority, then
+    # submission order — a total, deterministic order
+    priority: float = 0.0
+    seq: int = 0
     # set at completion (under the generator lock):
     done: bool = False
     kern: GeneratedKernel | None = None
@@ -388,279 +466,3 @@ class GenerationTicket:
         completion callback) will charge its generation time."""
         self.speculative = False
         self._charge_cb = None
-
-
-class AsyncGenerator:
-    """Single background compile executor shared by a whole coordinator.
-
-    The paper keeps the application running the current version while the
-    next one is emitted into a second code buffer; this is that overlap
-    for XLA compiles. One executor per process mirrors the coordinator's
-    single tuning thread: compilation parallelism is bounded at 1, so
-    tuning can never oversubscribe the host the kernels run on.
-
-    Modes:
-      * ``"thread"`` — a daemon worker thread drains the job queue;
-        generation time is measured wall time in the worker (real mode).
-      * ``"manual"`` — jobs complete only when ``run_pending()`` is
-        called (the coordinator calls it at the top of every ``pump``),
-        so a job submitted at pump *k* is ready at pump *k+1*: fully
-        deterministic under a ``VirtualClock``, no sleeps anywhere.
-
-    ``submit`` deduplicates by cache key: a job already in flight is
-    joined (the same ticket is returned), and a point already in the
-    compilette's cache returns an immediately-done ticket. Speculative
-    (prefetch) submissions carry a charge callback so their compile time
-    is billed to the requesting tuner's accounts even if the prefetched
-    variant is never proposed.
-    """
-
-    def __init__(self, mode: str = "thread",
-                 worker_idle_timeout_s: float = 30.0) -> None:
-        if mode not in ("thread", "manual"):
-            raise ValueError(f"AsyncGenerator mode must be 'thread' or "
-                             f"'manual', got {mode!r}")
-        self.mode = mode
-        self.worker_idle_timeout_s = worker_idle_timeout_s
-        self._mu = threading.Lock()
-        self._inflight: dict[tuple, GenerationTicket] = {}
-        # negative memo: keys whose generation raised. Bounded by the
-        # number of holes in the managed tuning spaces; without it a
-        # prefetched hole would be compiled (and billed) a second time
-        # when the tuner itself proposes the point.
-        self._failed: dict[tuple, BaseException] = {}
-        self._queue: "queue.Queue[GenerationTicket | None]" = queue.Queue()
-        self._worker: threading.Thread | None = None
-        self.submitted = 0
-        self.completed = 0
-        self.failed = 0
-        self.speculative_submitted = 0
-        self.joined = 0
-
-    # ------------------------------------------------------------ lifecycle
-    def _ensure_worker(self) -> None:
-        if self.mode != "thread":
-            return
-        with self._mu:
-            if self._worker is not None:
-                return
-            self._worker = threading.Thread(
-                target=self._worker_loop, daemon=True,
-                name="variant-generator")
-            self._worker.start()
-
-    def _worker_loop(self) -> None:
-        # The worker retires itself after an idle period (a fresh one is
-        # spawned by the next submit), so a forgotten coordinator — e.g.
-        # a per-request one that was never close()d — does not pin a
-        # blocked daemon thread for the life of the process.
-        while True:
-            try:
-                ticket = self._queue.get(timeout=self.worker_idle_timeout_s)
-            except queue.Empty:
-                with self._mu:
-                    if self._queue.empty():
-                        self._worker = None
-                        return
-                continue
-            if ticket is None:
-                with self._mu:
-                    self._worker = None
-                return
-            self._run(ticket)
-
-    def shutdown(self) -> None:
-        with self._mu:
-            worker = self._worker
-        if worker is not None:
-            self._queue.put(None)
-            worker.join(timeout=5.0)
-
-    # ------------------------------------------------------------- running
-    def _run(self, ticket: GenerationTicket) -> None:
-        t0 = time.perf_counter()
-        try:
-            kern = ticket.compilette.generate(
-                ticket.point, **ticket.specialization)
-            err = None
-        except BaseException as e:  # generation failure = late-found hole
-            # drop the traceback: it pins the whole _generate frame
-            # (model state, tracing temporaries) for as long as the
-            # failure memo lives, and no consumer ever re-raises
-            kern, err = None, e.with_traceback(None)
-        failed_charge = time.perf_counter() - t0
-        if err is not None:
-            try:
-                # a declared simulated cost keeps failure billing
-                # deterministic under virtual clocks (successes already
-                # bill the declared cost via generation_time_s)
-                sim = ticket.compilette._simulated_cost(
-                    ticket.point, ticket.specialization)
-                if sim is not None:
-                    failed_charge = sim
-            except Exception:
-                pass
-        with self._mu:
-            ticket.kern = kern
-            ticket.error = err
-            if err is not None:
-                self._failed[ticket.compilette.cache_key(
-                    ticket.point, ticket.specialization)] = err
-            charge = (kern.generation_time_s if kern is not None
-                      else failed_charge)
-            if ticket.speculative and ticket._charge_cb is not None:
-                # prefetch: the requester is billed NOW (used or not);
-                # the harvester must not charge a second time
-                cb, ticket.gen_charge_s = ticket._charge_cb, 0.0
-            else:
-                cb, ticket.gen_charge_s = None, charge
-            ticket.done = True
-            self._inflight.pop(
-                ticket.compilette.cache_key(
-                    ticket.point, ticket.specialization), None)
-            if err is None:
-                self.completed += 1
-            else:
-                self.failed += 1
-        if cb is not None:
-            # outside the lock: the callback charges tuner/coordinator
-            # accounts and may take their locks
-            cb(ticket, charge)
-
-    def run_pending(self, max_jobs: int | None = None) -> int:
-        """Manual mode: complete queued jobs inline. No-op in thread mode
-        (the worker drains the queue itself). Returns jobs completed."""
-        if self.mode != "manual":
-            return 0
-        n = 0
-        while max_jobs is None or n < max_jobs:
-            try:
-                ticket = self._queue.get_nowait()
-            except queue.Empty:
-                return n
-            if ticket is None:
-                continue
-            self._run(ticket)
-            n += 1
-        return n
-
-    # ------------------------------------------------------------- submit
-    def submit(
-        self,
-        compilette: Compilette,
-        point: Point,
-        specialization: Mapping[str, Any],
-        *,
-        speculative: bool = False,
-        charge_cb: Callable[[GenerationTicket, float], None] | None = None,
-    ) -> GenerationTicket:
-        """Request generation of ``point``; never blocks on the compile.
-
-        Returns a ticket that is already ``done`` when the variant is in
-        the cache, the in-flight ticket when the same key was already
-        submitted (a non-speculative join adopts a speculative ticket),
-        or a freshly queued job otherwise.
-        """
-        key = compilette.cache_key(point, specialization)
-
-        def _join_locked(existing: GenerationTicket) -> GenerationTicket:
-            self.joined += 1
-            if not speculative:
-                existing.adopt()
-            return existing
-
-        with self._mu:
-            existing = self._inflight.get(key)
-            if existing is not None:
-                return _join_locked(existing)
-            failed = self._failed.get(key)
-            if failed is not None:
-                # known hole: an already-billed failure, never recompiled
-                return GenerationTicket(
-                    compilette=compilette, point=dict(point),
-                    specialization=dict(specialization), done=True,
-                    error=failed, gen_charge_s=0.0)
-        if compilette.cache is not None and key in compilette.cache:
-            # hit: materialize through generate() so cache counters and
-            # the zero-cost hit wrapper stay consistent. OUTSIDE the
-            # generator lock: in the rare race where an LRU eviction
-            # lands between the check and the get, generate() recompiles
-            # inline — a bounded stall for this caller only, charged
-            # below AND flagged as a stall, never a compile inside the
-            # critical section. A failure on that inline path is a hole
-            # like any other (a raise here would crash the caller's
-            # pump/request thread).
-            try:
-                kern = compilette.generate(point, **dict(specialization))
-            except BaseException as e:
-                err = e.with_traceback(None)
-                with self._mu:
-                    self._failed[key] = err
-                    self.failed += 1
-                return GenerationTicket(
-                    compilette=compilette, point=dict(point),
-                    specialization=dict(specialization), done=True,
-                    error=err, gen_charge_s=0.0)
-            return GenerationTicket(
-                compilette=compilette, point=dict(point),
-                specialization=dict(specialization), done=True,
-                kern=kern, gen_charge_s=kern.generation_time_s,
-                stalled=kern.meta.get("source") == "compiled")
-        with self._mu:
-            existing = self._inflight.get(key)
-            if existing is not None:   # raced in while we were unlocked
-                return _join_locked(existing)
-            ticket = GenerationTicket(
-                compilette=compilette, point=dict(point),
-                specialization=dict(specialization),
-                speculative=speculative, _charge_cb=charge_cb)
-            self._inflight[key] = ticket
-            self.submitted += 1
-            if speculative:
-                self.speculative_submitted += 1
-        # enqueue BEFORE ensuring the worker: an idle worker only retires
-        # after seeing an empty queue, so the job is picked up either by
-        # the surviving worker or by the one _ensure_worker spawns
-        self._queue.put(ticket)
-        self._ensure_worker()
-        return ticket
-
-    def poll(self, ticket: GenerationTicket) -> GenerationTicket | None:
-        """Non-blocking readiness check: the ticket when done, else None."""
-        with self._mu:
-            return ticket if ticket.done else None
-
-    def disown(self, ticket: GenerationTicket,
-               charge_cb: Callable[[GenerationTicket, float], None] | None
-               ) -> float:
-        """Release a ticket nobody will harvest (its tuner is retiring).
-
-        Returns the unclaimed charge of an already-completed ticket (the
-        caller bills it); a still-in-flight ticket is converted to a
-        speculative one so ``charge_cb`` bills it at completion — either
-        way the compile cost reaches the budget exactly once.
-        """
-        with self._mu:
-            if ticket.done:
-                charge, ticket.gen_charge_s = ticket.gen_charge_s, 0.0
-                return charge
-            ticket.speculative = True
-            ticket._charge_cb = charge_cb
-            return 0.0
-
-    @property
-    def in_flight(self) -> int:
-        with self._mu:
-            return len(self._inflight)
-
-    def stats(self) -> dict[str, Any]:
-        with self._mu:
-            return {
-                "mode": self.mode,
-                "submitted": self.submitted,
-                "completed": self.completed,
-                "failed": self.failed,
-                "speculative_submitted": self.speculative_submitted,
-                "joined": self.joined,
-                "in_flight": len(self._inflight),
-            }

@@ -49,8 +49,10 @@ tuning`` / ``--kernel-strategy`` flags pick the kernel up by name.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import importlib
 import os
+import time
 from typing import Any, Callable, Mapping
 
 from repro.core.compilette import Compilette
@@ -61,6 +63,7 @@ __all__ = [
     "KernelDef",
     "KernelCompilette",
     "KernelCatalog",
+    "compile_in_process",
     "discover_kernels",
     "get_catalog",
 ]
@@ -88,6 +91,11 @@ class KernelDef:
     abstract_args: Callable[[Mapping[str, Any]], tuple] | None = None
     example_args: Callable[[Mapping[str, Any]], tuple] | None = None
     default_point: Point | None = None
+    # sha256 prefix of the defining ops.py source, stamped by
+    # discover_kernels: persisted bests and cached executables are keyed
+    # under it, so editing a kernel's source cold-starts exactly that
+    # kernel instead of warm-starting from stale bests
+    source_hash: str | None = None
 
 
 class KernelCompilette(Compilette):
@@ -144,6 +152,15 @@ class KernelCompilette(Compilette):
             gen_cost_s=gen_cost_s,
             cache_token=cache_token,
         )
+        if defn.source_hash:
+            # source identity reaches both persistence layers: the
+            # coordinator appends fingerprint_extra to the registry
+            # device key, and the generation cache keys on the token —
+            # an edited ops.py invalidates this kernel's entries only
+            self.fingerprint_extra = f"src-{defn.source_hash}"
+            self.cache_token = (
+                f"{self.cache_token}+{self.fingerprint_extra}"
+                if self.cache_token else self.fingerprint_extra)
 
     # ------------------------------------------------------------ generate
     def _build(self, point: Point, **sp: Any) -> Callable[..., Any]:
@@ -179,6 +196,29 @@ class KernelCompilette(Compilette):
             self.aot_fallbacks += 1
             return fn
 
+    # ----------------------------------------------------- process backend
+    def process_payload(self, point: Point,
+                        specialization: Mapping[str, Any]) -> tuple | None:
+        """Picklable compile job for the farm's ``"process"`` backend.
+
+        ``(module, attr, kwargs)`` naming :func:`compile_in_process`,
+        which re-resolves this kernel from the child's own catalog and
+        AOT-compiles the point there — the GIL-heavy trace/lower phase
+        runs outside the serving process, and with jax's persistent
+        compilation cache configured the parent's subsequent compile
+        deserializes instead of recompiling. ``None`` (fall back to an
+        in-thread compile) for virtual/lazy backends, where generation
+        is cheap by construction.
+        """
+        if self.virtual is not None or not self.aot:
+            return None
+        return ("repro.kernels.catalog", "compile_in_process", {
+            "kernel": self.defn.name,
+            "point": dict(point),
+            "spec": {**self.spec, **dict(specialization)},
+            "interpret": self.interpret,
+        })
+
     # ------------------------------------------------------------- helpers
     def has_valid_points(self) -> bool:
         """False when every point is a hole at this spec (untunable shape)."""
@@ -194,6 +234,24 @@ class KernelCompilette(Compilette):
         if self.defn.example_args is None:
             raise ValueError(f"kernel {self.name!r} declares no example args")
         return self.defn.example_args(self.spec)
+
+
+def compile_in_process(kernel: str, point: Mapping[str, Any],
+                       spec: Mapping[str, Any],
+                       interpret: bool = True) -> float:
+    """Child-process entry for the compile farm's ``"process"`` backend.
+
+    Resolves ``kernel`` from this process's own catalog and AOT-compiles
+    ``point`` — the compiled executable itself stays here (XLA
+    executables don't pickle), but the compile populates jax's
+    persistent compilation cache when one is configured, and the
+    returned wall seconds let the parent charge the true compile cost.
+    """
+    comp = get_catalog().compilette(
+        kernel, spec, interpret=interpret, aot=True)
+    start = time.perf_counter()
+    comp._build(dict(point))
+    return time.perf_counter() - start
 
 
 class KernelCatalog:
@@ -243,18 +301,26 @@ def discover_kernels(catalog: KernelCatalog | None = None) -> KernelCatalog:
     catalog = catalog if catalog is not None else _CATALOG
     import repro.kernels as pkg
 
-    names: set[str] = set()
+    sources: dict[str, str] = {}
     for root in pkg.__path__:
         for entry in sorted(os.listdir(root)):
-            if os.path.isfile(os.path.join(root, entry, "ops.py")):
-                names.add(entry)
-    for name in sorted(names):
+            path = os.path.join(root, entry, "ops.py")
+            if os.path.isfile(path):
+                sources.setdefault(entry, path)
+    for name in sorted(sources):
         try:
             mod = importlib.import_module(f"repro.kernels.{name}.ops")
         except ImportError:
             continue
         defn = getattr(mod, "KERNEL", None)
         if isinstance(defn, KernelDef):
+            if defn.source_hash is None:
+                # stamp in place (the dataclass is frozen, but the ops
+                # module's KERNEL object must keep its identity so
+                # re-discovery stays idempotent)
+                with open(sources[name], "rb") as fh:
+                    digest = hashlib.sha256(fh.read()).hexdigest()[:12]
+                object.__setattr__(defn, "source_hash", digest)
             catalog.register(defn)
     return catalog
 

@@ -25,15 +25,18 @@ the paper's economics across both dimensions:
     kernel, a single coordinator thread (or cooperative ``maybe_pump``
     calls on the hot path) drives every managed autotuner;
   * **double-buffered variant generation** — with ``async_generation``
-    on, a single background :class:`~repro.core.AsyncGenerator` compiles
-    candidates while the current active functions keep serving (the
-    paper's "new version in a code buffer"), every generation goes
-    through a process-wide :class:`~repro.core.GenerationCache` (a point
-    revisited after bucketing, eviction or warm start never recompiles),
-    and the scheduler prefetch-compiles the next ``prefetch`` proposals
-    of the kernel it just served (``SearchStrategy.peek``). Generation
-    time is charged to the shared budget in full either way — only the
-    hot-path *stall* (``gen_stall_s``) disappears;
+    on, a background :class:`~repro.core.CompileFarm` of
+    ``compile_workers`` workers compiles candidates while the current
+    active functions keep serving (the paper's "new version in a code
+    buffer", scaled to M buffers), scheduled by the same gain priority
+    ``pump`` uses and capped per kernel so one wide space cannot starve
+    the rest; every generation goes through a process-wide
+    :class:`~repro.core.GenerationCache` (a point revisited after
+    bucketing, eviction or warm start never recompiles), and the
+    scheduler prefetch-compiles the next ``prefetch`` proposals of each
+    kernel it serves (``SearchStrategy.peek``). Generation time is
+    charged to the shared budget in full either way — only the hot-path
+    *stall* (``gen_stall_s``) disappears;
   * **a managed lifecycle** — a :class:`~repro.runtime.lifecycle.TunerLifecycle`
     buckets shape-like specializations (so varied prompt lengths share
     tuners), marks exhausted tuners ``CONVERGED`` (releasing their pinned
@@ -55,8 +58,8 @@ import time
 from typing import Any, Callable
 
 from repro.core.autotuner import OnlineAutotuner
+from repro.core.compile_farm import CompileFarm
 from repro.core.compilette import (
-    AsyncGenerator,
     Compilette,
     GenerationCache,
     GenerationTicket,
@@ -93,6 +96,10 @@ class ManagedTuner:
     state: TunerState = TunerState.ACTIVE
     last_used_s: float = 0.0
     calls_at_last_wake: int = 0
+    # persistence key device: the coordinator's device fingerprint plus
+    # the compilette's own identity suffix (e.g. the kernel source hash),
+    # so editing a kernel invalidates exactly that kernel's warm starts
+    registry_device: str = ""
     # set by the KernelTuningPlane: this tuner is an individual kernel
     # compilette (vs a whole step-program); consumers (CLI reports) can
     # split stats() entries without hard-coding step-program names
@@ -141,6 +148,7 @@ class TuningCoordinator:
         async_generation: "bool | str" = False,
         generation_cache: GenerationCache | None = None,
         prefetch: int = 1,
+        compile_workers: int = 1,
     ) -> None:
         self.policy = policy or RegenerationPolicy()
         self.clock = clock or time.perf_counter
@@ -183,20 +191,25 @@ class TuningCoordinator:
         self.generation_cache = (
             generation_cache if generation_cache is not None
             else GenerationCache(max_entries=256))
-        # Double-buffered generation: one background compile executor for
-        # the whole process (mirroring the single tuning thread). True
-        # picks the mode from the clock — a virtual (advanceable) clock
-        # gets the deterministic "manual" pipeline (jobs complete at the
-        # next pump, no sleeps), a real clock gets the worker thread.
-        # Pass "thread"/"manual" to force one.
+        # Double-buffered generation: one background compile farm for the
+        # whole process, with ``compile_workers`` workers draining the
+        # gain-priority queue. True picks the mode from the clock — a
+        # virtual (advanceable) clock gets the deterministic "manual"
+        # pipeline (one batch of up to ``workers`` jobs completes at the
+        # next pump, no sleeps), a real clock gets worker threads. Pass
+        # "thread"/"manual"/"process" to force one. The per-kernel cap —
+        # a kernel's own request plus its prefetch quota — keeps one
+        # kernel's wide space from flooding the farm.
+        self.prefetch = max(int(prefetch), 0)
         if async_generation:
             mode = (async_generation if isinstance(async_generation, str)
                     else ("manual" if hasattr(self.clock, "advance")
                           else "thread"))
-            self.generator: AsyncGenerator | None = AsyncGenerator(mode=mode)
+            self.generator: CompileFarm | None = CompileFarm(
+                mode=mode, workers=max(int(compile_workers), 1),
+                per_kernel_cap=self.prefetch + 1)
         else:
             self.generator = None
-        self.prefetch = max(int(prefetch), 0)
         self._managed: list[ManagedTuner] = []
         self._by_key: dict[tuple[str, str], ManagedTuner] = {}
         # Accounting tombstone for retired tuners: the shared budget must
@@ -239,8 +252,16 @@ class TuningCoordinator:
             if existing is not None:
                 existing.last_used_s = self.clock()
                 return existing
+            # Persistence fingerprint: the process device key plus any
+            # compilette-declared identity (KernelCompilette appends
+            # "src-<hash>" of its ops.py). Editing a kernel's source
+            # changes the exact key, so its stale bests miss and exactly
+            # that kernel retunes; the legacy fallback chain only ever
+            # reaches pre-fingerprint 1–2 part keys, never another hash.
+            extra = getattr(compilette, "fingerprint_extra", None)
+            reg_device = f"{self.device}:{extra}" if extra else self.device
             # exact fingerprint (incl. compiler version), then legacy keys
-            warm_point = self.registry.get_warm(name, spec, self.device)
+            warm_point = self.registry.get_warm(name, spec, reg_device)
             if warm_point is not None and not compilette.space.contains(
                     warm_point):
                 # stale entry from an older space definition (renamed or
@@ -271,6 +292,7 @@ class TuningCoordinator:
                 warm_started=warm_point is not None,
                 clock=self.clock,
                 last_used_s=self.clock(),
+                registry_device=reg_device,
             )
             self._managed.append(managed)
             self._by_key[key] = managed
@@ -352,8 +374,9 @@ class TuningCoordinator:
             1.0 + t.accounts.regenerations
         )
 
-    def _candidates(self) -> list[ManagedTuner]:
-        """Wakeable tuners, best priority first (registration order ties).
+    def _candidates(self) -> list[tuple[float, ManagedTuner]]:
+        """Wakeable tuners with their priorities, best first
+        (registration order ties).
 
         ``sorted`` is stable, so equal priorities (e.g. several +inf
         bootstrap kernels) keep registration order.
@@ -362,49 +385,65 @@ class TuningCoordinator:
         eligible = [(p, i, m) for i, (p, m) in enumerate(prioritized)
                     if p > float("-inf")]
         eligible.sort(key=lambda t: (-t[0], t[1]))
-        return [m for _, _, m in eligible]
+        return [(p, m) for p, _, m in eligible]
 
     def pump(self) -> bool:
-        """One scheduling slot: wake the best kernel that can use it.
+        """One scheduling slot: hand the farm a prioritized batch.
 
-        Returns True when the wake swapped in a faster variant. A kernel
-        frozen by its own latency-headroom gate — or merely waiting for
-        its background compile — passes the slot to the next candidate
-        (an over-SLO prefill must not starve a fast decode step forever);
-        a shared-budget denial instead ends the slot, so accruing budget
-        stays earmarked for the most valuable kernel rather than leaking
-        to cheaper, lower-value ones. The one exception: when the budget
-        still has headroom at the kernel's own cost EWMA, the denial was
-        its next *candidate's* predicted cost (cost-model compilettes
-        gate on it) — an individually unaffordable variant passes the
-        slot instead of freezing every other kernel behind it.
+        Returns True when some wake swapped in a faster variant. Up to
+        ``generator.workers`` kernels get a productive wake per pump
+        (one without a farm) — the farm has that many compile slots, so
+        a single pump can keep every worker fed; each woken kernel's
+        request is submitted at its scheduling priority and its next
+        proposals are prefetched. A kernel frozen by its own
+        latency-headroom gate — or merely waiting for its background
+        compile — passes the slot to the next candidate (an over-SLO
+        prefill must not starve a fast decode step forever); a
+        shared-budget denial instead ends the whole pump, so accruing
+        budget stays earmarked for the most valuable kernels rather
+        than leaking to cheaper, lower-value ones. The one exception:
+        when the budget still has headroom at the kernel's own cost
+        EWMA, the denial was its next *candidate's* predicted cost
+        (cost-model compilettes gate on it) — an individually
+        unaffordable variant passes the slot instead of freezing every
+        other kernel behind it.
 
         With async generation a productive wake is either a *request*
-        (next variant submitted to the background executor) or a
-        *harvest* (compiled candidate evaluated, maybe swapped); queued
-        jobs are completed at the top of the pump, so in the
-        deterministic "manual" mode a variant requested at pump *k* is
-        harvestable at pump *k+1* — never sooner.
+        (next variant submitted to the farm) or a *harvest* (compiled
+        candidate evaluated, maybe swapped); one batch of queued jobs —
+        up to ``workers`` of them, highest priority first — completes at
+        the top of the pump, so in the deterministic "manual" mode a
+        variant requested at pump *k* is harvestable at pump *k+1* —
+        never sooner (max-overlap semantics: the batch's wall time hides
+        inside the serving interval, its full cost is billed).
         """
+        batch = 1
         if self.generator is not None:
             self.generator.run_pending()
+            batch = self.generator.workers
         self.sweep()
         with self._lock:
             candidates = self._candidates()
-        for m in candidates:
+        progressed = 0
+        any_swapped = False
+        for prio, m in candidates:
             t = m.tuner
             # progress = a measurement reported (sync cycle, async
             # harvest, or a failed generation logged as a hole) or an
             # async generation requested
             before = t.explorer.state.n_reported + t.accounts.gen_requests
-            swapped = t.wake()
+            t.submit_priority = prio
+            any_swapped |= t.wake()
             if t.explorer.state.n_reported + t.accounts.gen_requests != before:
                 m.calls_at_last_wake = t.accounts.kernel_calls
                 self._flush_best(m)
-                self._prefetch(m)
-                return swapped
+                self._prefetch(m, prio)
+                progressed += 1
+                if progressed >= batch:
+                    break
+                continue
             if t.generation_in_flight:
-                # waiting on the compile executor: the slot moves on, the
+                # waiting on the compile farm: the slot moves on, the
                 # hot path keeps running the current active_fn un-stalled
                 continue
             # the slot did nothing here: leave this kernel's hotness
@@ -421,11 +460,11 @@ class TuningCoordinator:
                 # per-kernel condition, so pass the slot rather than
                 # freezing the whole fleet behind one expensive variant
                 continue
-            return False       # shared-budget denial: slot ends
-        return False
+            break              # shared-budget denial: the pump ends
+        return any_swapped
 
     # ----------------------------------------------------------- prefetch
-    def _prefetch(self, m: ManagedTuner) -> None:
+    def _prefetch(self, m: ManagedTuner, priority: float = 0.0) -> None:
         """Speculatively compile the next 1–2 proposals of ``m``.
 
         ``SearchStrategy.peek`` exposes the upcoming candidates without
@@ -434,7 +473,11 @@ class TuningCoordinator:
         serving — runs, so the tuner's own later request is a hit. The
         compile time is charged to the requesting tuner at completion
         whether or not the variant is ever proposed: prefetch spends real
-        compute and the shared budget must see it.
+        compute and the shared budget must see it. Submissions carry the
+        kernel's scheduling priority (speculation sorts after requests at
+        equal priority in the farm's queue) and stop at the farm's
+        per-kernel in-flight cap — rejected prefetches simply retry on a
+        later slot.
         """
         if self.generator is None or self.prefetch <= 0:
             return
@@ -453,9 +496,12 @@ class TuningCoordinator:
                 continue
             if not self._shared_budget_gate(t.accounts, now, est):
                 return
-            self.generator.submit(
+            ticket = self.generator.submit(
                 t.compilette, point, t.specialization,
-                speculative=True, charge_cb=self._speculative_charge(m))
+                speculative=True, charge_cb=self._speculative_charge(m),
+                priority=priority)
+            if ticket is None:
+                return   # per-kernel cap: this kernel's share is full
 
     def _speculative_charge(self, m: ManagedTuner):
         """Charge callback billing a prefetch compile to its requester.
@@ -490,7 +536,8 @@ class TuningCoordinator:
         best = m.tuner.explorer.best_point
         if best is not None:
             self.registry.put(
-                m.name, m.specialization, self.device,
+                m.name, m.specialization,
+                m.registry_device or self.device,
                 best, m.tuner.explorer.best_score,
                 strategy=m.tuner.explorer.name,
             )

@@ -92,6 +92,8 @@ _TUNING_ALIASES = {
     "pump_every": "pump_every",
     "async_generation": "async_generation",
     "prefetch": "prefetch",
+    "compile_workers": "compile_workers",
+    "compile_backend": "compile_backend",
     "kernel_tuning": "kernel_tuning",
     "kernel_strategies": "strategies",
 }

@@ -63,6 +63,8 @@ _TUNING_ALIASES = {
     "tune_strategy": "strategy",
     "tune_async": "async_generation",
     "tune_prefetch": "prefetch",
+    "compile_workers": "compile_workers",
+    "compile_backend": "compile_backend",
     "kernel_tuning": "kernel_tuning",
     "kernel_strategies": "strategies",
 }

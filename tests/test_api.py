@@ -610,16 +610,19 @@ def test_decode_attention_bucket_registry_keys_never_collide():
     assert sorted(cold) == [256, 1024, 4096]
 
     # distinct buckets -> distinct registry keys (the collision would
-    # silently share one tuned point across every cache length)
+    # silently share one tuned point across every cache length); the
+    # device part carries the kernel's source hash (satellite: editing
+    # ops.py invalidates persisted bests)
     keys = {S: TunedRegistry.key("decode_attention",
-                                 dict(h.specialization), "test:v")
+                                 dict(h.specialization), h.registry_device)
             for S, h in cold.items()}
     assert len(set(keys.values())) == len(max_lens)
+    assert all(":src-" in h.registry_device for h in cold.values())
     # and each key resolves to ITS bucket's best, not a shared one
     for S, h in cold.items():
         assert h.tuner.explorer.finished
         entry = registry.get("decode_attention",
-                             dict(h.specialization), "test:v")
+                             dict(h.specialization), h.registry_device)
         assert entry == h.tuner.explorer.best_point, S
 
     warm = run_session()
@@ -667,6 +670,55 @@ def test_generation_cache_byte_bound_evicts_cheapest():
     for i, name in enumerate(("p", "q", "r")):
         both.put((name,), _entry(0.1 * (i + 1), 10))
     assert len(both) == 2 and both.evictions == 1
+
+
+def test_memory_pressure_shrinks_effective_byte_bound():
+    """Satellite: the byte bound follows live device headroom — as free
+    device memory shrinks, eviction tightens below the static max_bytes;
+    with plenty free, the static bound rules unchanged."""
+    free = {"bytes": 10**9}
+    cache = GenerationCache(max_bytes=3000,
+                            free_memory_fn=lambda: free["bytes"],
+                            memory_headroom_frac=0.5)
+    for name in ("a", "b", "c"):
+        cache.put((name,), _entry(0.1, 1000))
+    # plenty free: static bound rules, nothing evicted
+    assert len(cache) == 3 and cache.pressure_evictions == 0
+    assert cache.stats()["effective_max_bytes"] == 3000
+    # device fills up: headroom says only 2000 bytes of cache allowed
+    free["bytes"] = 4000
+    cache.put(("d",), _entry(0.1, 1000))
+    assert cache.stats()["effective_max_bytes"] == 2000
+    assert cache.stats()["bytes"] <= 2000
+    # evictions forced by PRESSURE (not the static bound) are counted
+    assert cache.pressure_evictions > 0
+    assert cache.evictions >= cache.pressure_evictions
+
+
+def test_memory_pressure_static_fallback_when_unreadable():
+    """No readable device stats (CPU hosts: free_memory_fn returns None)
+    -> the static max_bytes bound applies exactly as before."""
+    cache = GenerationCache(max_bytes=2000, free_memory_fn=lambda: None)
+    for name in ("a", "b", "c"):
+        cache.put((name,), _entry(0.1, 1000))
+    assert cache.stats()["effective_max_bytes"] == 2000
+    assert len(cache) == 2 and cache.pressure_evictions == 0
+    # and with NO static bound either, pressure alone can still bound
+    unbounded = GenerationCache(free_memory_fn=lambda: 2000,
+                                memory_headroom_frac=0.5)
+    for name in ("x", "y", "z"):
+        unbounded.put((name,), _entry(0.1, 500))
+    assert unbounded.stats()["effective_max_bytes"] == 1000
+    assert unbounded.stats()["bytes"] <= 1000
+    assert unbounded.pressure_evictions > 0
+
+
+def test_device_free_memory_bytes_is_none_or_positive():
+    """The jax probe degrades to None (static fallback) off-accelerator."""
+    from repro.core import device_free_memory_bytes
+
+    free = device_free_memory_bytes()
+    assert free is None or free > 0
 
 
 def test_aot_compile_records_size_estimate():

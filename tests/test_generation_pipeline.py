@@ -87,8 +87,9 @@ def test_cache_hit_skips_generate_and_costs_nothing():
     assert comp.compiles["n"] == 1               # _generate ran once, ever
     from repro.core import DEFAULT_ENTRY_BYTES
     assert cache.stats() == {"entries": 1, "bytes": DEFAULT_ENTRY_BYTES,
-                             "max_bytes": None, "hits": 1, "misses": 1,
-                             "evictions": 0, "hit_rate": 0.5}
+                             "max_bytes": None, "effective_max_bytes": None,
+                             "hits": 1, "misses": 1, "evictions": 0,
+                             "pressure_evictions": 0, "hit_rate": 0.5}
 
 
 def test_cache_key_separates_identities():
@@ -382,7 +383,7 @@ def test_speculative_compile_charged_even_if_tuner_retires():
     clock.advance(6.0)    # idle past the horizon while jobs are queued
     retired = coord.sweep()
     assert retired == [m]
-    coord.generator.run_pending()   # compiles complete after retirement
+    coord.generator.drain()   # compiles complete after retirement
     # every queued compile — the tuner's own pending request (disowned at
     # retirement) AND both prefetches — is billed to the tombstone
     agg = coord._aggregate_accounts()

@@ -182,11 +182,15 @@ def test_kernel_plane_virtual_acceptance():
     assert s["kernels"]["matmul"]["strategy"] == "greedy"
     assert s["kernels"]["attention"]["strategy"] == "random"
     assert s["kernels"]["rmsnorm"]["strategy"] == "two_phase"
-    # independent registry keys: one tuned entry per (kernel, spec)
+    # independent registry keys: one tuned entry per (kernel, spec),
+    # persisted under the source-hashed device fingerprint
     for m in coord._managed:
         coord._flush_best(m)
+    by_name = {m.name: m for m in coord._managed}
     for name, spec in SPECS.items():
-        assert coord.registry.get(name, spec, "test:v") is not None, name
+        dev = by_name[name].registry_device
+        assert dev.startswith("test:v:src-"), name
+        assert coord.registry.get(name, spec, dev) is not None, name
     # every kernel explored and was billed for generation
     for name, k in s["kernels"].items():
         assert k["regenerations"] > 0, name
@@ -435,3 +439,71 @@ def test_traced_programs_adopt_tuned_attention_chunks():
     with use_kernel_plane(plane):
         assert plane_attn_chunks(cfg) == (cfg.attn_q_chunk,
                                           cfg.attn_k_chunk)
+
+
+# ------------------------------------------------- source-hash identity
+def test_discovery_stamps_source_hash_of_ops_py():
+    """Satellite: every discovered KERNEL carries the sha256 prefix of
+    its defining ops.py, and the compilette turns it into a persistence
+    fingerprint + cache-token suffix."""
+    import hashlib
+    import repro.kernels as pkg
+
+    cat = get_catalog()
+    for name in cat.names():
+        defn = cat.get(name)
+        src = None
+        for root in pkg.__path__:
+            p = pathlib.Path(root) / name / "ops.py"
+            if p.is_file():
+                src = p
+                break
+        assert src is not None, name
+        expect = hashlib.sha256(src.read_bytes()).hexdigest()[:12]
+        assert defn.source_hash == expect, name
+    comp = cat.compilette("rmsnorm", {"N": 16, "d": 8, "dtype": "float32"})
+    h = cat.get("rmsnorm").source_hash
+    assert comp.fingerprint_extra == f"src-{h}"
+    assert comp.cache_token.endswith(f"src-{h}")
+
+
+def test_edited_kernel_source_cold_starts_only_that_kernel():
+    """Changing a kernel's source hash must miss its persisted best (the
+    tuned point may be wrong for the new code) while an unchanged hash
+    still warm-starts — and the registry fallback chain never crosses
+    from one hash to another."""
+    import dataclasses
+
+    from repro.core import TunedRegistry
+
+    registry = TunedRegistry()
+    clock = VirtualClock()
+    defn = get_catalog().get("rmsnorm")
+
+    def run(source_hash):
+        coord = TuningCoordinator(
+            policy=RegenerationPolicy(1.0, 0.5), device="test:v",
+            clock=clock, registry=registry, async_generation=True)
+        comp = KernelCompilette(
+            dataclasses.replace(defn, source_hash=source_hash),
+            SPECS["rmsnorm"], virtual=(clock, TPU_V5E), gen_cost_s=GEN_COST)
+        h = coord.register("rmsnorm", comp,
+                           VirtualClockEvaluator(clock))
+        for i in range(6000):
+            h(i)
+            coord.pump()
+            if h.tuner.explorer.finished:
+                break
+        for m in coord._managed:
+            coord._flush_best(m)
+        return h
+
+    cold = run("aaaa00000001")
+    assert cold.tuner.explorer.finished
+    assert cold.registry_device == "test:v:src-aaaa00000001"
+    # same source: warm start hits the persisted best
+    same = run("aaaa00000001")
+    assert same.warm_started
+    # edited source (different hash): cold start — stale best never leaks
+    edited = run("bbbb00000002")
+    assert not edited.warm_started

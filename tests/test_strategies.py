@@ -481,3 +481,45 @@ def test_every_strategy_is_deterministic_per_seed(strategy, peek_n):
     plain = [e[1] for e in plain_run if e[0] == "propose"]
     assert sorted(proposed) == sorted(plain)
     assert a[-1] == plain_run[-1]         # same best point, same score
+
+
+# ------------------------------------------------- parity: compile farm
+@pytest.mark.parametrize("workers", [1, 4], ids=["one_worker", "farm"])
+@pytest.mark.parametrize("strategy", ALL_STRATEGIES)
+def test_strategy_converges_with_prefetch_through_farm(strategy, workers):
+    """Every strategy still covers its space and finds the optimum when
+    its proposals AND peek(n) prefetches drain through a multi-worker
+    compile farm — speculation must never consume, reorder or duplicate
+    the proposal stream, at any M."""
+    from repro.core import virtual_compilette
+    from repro.runtime.coordinator import TuningCoordinator
+
+    clock = VirtualClock()
+    coord = TuningCoordinator(
+        policy=RegenerationPolicy(1.0, 0.5), device="test:v", clock=clock,
+        async_generation=True, prefetch=2, compile_workers=workers,
+        strategy=strategy)
+    comp = virtual_compilette(clock, "k", small_space(), cost,
+                              gen_cost_s=0.010)
+    m = coord.register("k", comp, VirtualClockEvaluator(clock),
+                       reference_fn=virtual_kernel(clock, 0.009))
+    for i in range(2000):
+        m(i)
+        clock.advance(0.0005)
+        coord.pump()
+        if m.tuner.explorer.finished:
+            break
+    strat = m.tuner.explorer
+    assert strat.finished
+    assert strat.best_point == {"unroll": 8, "sched": 1}
+    assert strat.best_score == pytest.approx(cost(strat.best_point))
+    # prefetch really flowed through the farm and stayed off the hot path
+    farm = coord.generator.stats()
+    assert farm["speculative_submitted"] > 0
+    assert farm["workers"] == workers
+    assert m.tuner.accounts.gen_stall_s == 0.0
+    # every measured point was compiled exactly once and cached (joins
+    # dedup concurrent request/prefetch submissions by key; prefetched-
+    # but-never-proposed points may add a few more entries on top)
+    assert (coord.stats()["generation_cache"]["entries"]
+            >= strat.state.n_reported)
