@@ -28,16 +28,36 @@ sys.path.insert(0, os.path.dirname(__file__))
 
 from common import save, table  # noqa: E402
 
-from repro.bench.replay import fleet_scenarios, replay_scenario  # noqa: E402
+import dataclasses  # noqa: E402
+
+from repro.bench.replay import (  # noqa: E402
+    fault_scenarios,
+    fleet_scenarios,
+    replay_scenario,
+    replay_tuning_defaults,
+)
 from repro.configs import REGISTRY  # noqa: E402
 
 MAX_OVERHEAD_PCT = 5.0
 MIN_SPEEDUP = 1.0
 
+# Fault scenarios replay a fixed-length trace even under --quick: the
+# injected faults land on points the explorer only reaches some way into
+# the search, and a 96-request trace can end before any faulted point is
+# proposed. One config at 320 requests costs well under a second.
+FAULT_TARGET = 320
+FAULT_CONFIG = "deepseek-7b"
+
 ROW_COLS = [
     "scenario", "config", "n_requests", "p50_ms", "p99_ms",
     "overhead_pct", "speedup_vs_ref", "speedup_all_in",
     "time_to_best_s", "cache_hit_rate", "swaps",
+]
+
+FAULT_COLS = [
+    "scenario", "config", "n_requests", "overhead_pct", "speedup_vs_ref",
+    "gate_checks", "gate_failures", "canary_calls", "canary_promotions",
+    "rollbacks", "quarantined", "served_wrong_calls",
 ]
 
 
@@ -85,6 +105,74 @@ def check_rows(rows: list[dict]) -> list[str]:
     return violations
 
 
+def _fault_rows_from_report(scenario_name: str, report: dict) -> list[dict]:
+    t = report["tuning"]
+    rows = []
+    for config, pt in sorted(report["per_tenant"].items()):
+        rows.append({
+            "scenario": scenario_name,
+            "config": config,
+            "n_requests": pt["n_requests"],
+            "overhead_pct": t["overhead_pct"],
+            "speedup_vs_ref": pt["speedup_vs_ref"],
+            "gate_checks": t["gate_checks"],
+            "gate_failures": t["gate_failures"],
+            "canary_calls": t["canary_calls"],
+            "canary_promotions": t["canary_promotions"],
+            "rollbacks": t["rollbacks"],
+            "quarantined": t["quarantined"],
+            "served_wrong_calls": t["served_wrong_calls"],
+        })
+    return rows
+
+
+def check_fault_rows(rows: list[dict], probation: int = 8) -> list[str]:
+    """The trusted-swaps gates, CI-hard-failed like the clean ones.
+
+    Every fault row must serve zero wrong-output production calls and
+    stay inside the overhead envelope; each injected failure mode must
+    actually trip its defense (quarantine, oracle gate, rollback); and
+    canary exposure is bounded — a bad variant can touch at most
+    ``canary_calls`` production calls before the rollback lands.
+    """
+    violations = []
+    for r in rows:
+        where = f"{r['scenario']}/{r['config']}"
+        if r["served_wrong_calls"] != 0:
+            violations.append(
+                f"{where}: {r['served_wrong_calls']} production calls "
+                "served by a wrong-output variant (must be 0)")
+        if r["overhead_pct"] > MAX_OVERHEAD_PCT:
+            violations.append(
+                f"{where}: tuning overhead {r['overhead_pct']:.2f}% "
+                f"> {MAX_OVERHEAD_PCT}% under faults")
+        if r["speedup_vs_ref"] < MIN_SPEEDUP:
+            violations.append(
+                f"{where}: speedup vs reference "
+                f"{r['speedup_vs_ref']:.6f} < {MIN_SPEEDUP} under faults")
+        if "compile" in r["scenario"] and r["quarantined"] < 1:
+            violations.append(
+                f"{where}: injected compile failures never quarantined")
+        if "wrong_output" in r["scenario"] and r["gate_failures"] < 1:
+            violations.append(
+                f"{where}: injected wrong-output variant never failed "
+                "the oracle gate")
+        if "tail" in r["scenario"] and r["rollbacks"] < 1:
+            violations.append(
+                f"{where}: injected tail regression never rolled back")
+        # bounded rollback latency: each gate-passing variant gets one
+        # canary episode, and an episode serves at most ``probation``
+        # production calls before it promotes, rolls back, or is
+        # superseded by a better candidate
+        exposure_cap = (
+            max(r["gate_checks"] - r["gate_failures"], 0) * probation)
+        if r["canary_calls"] > exposure_cap:
+            violations.append(
+                f"{where}: {r['canary_calls']} canary calls exceed the "
+                f"probation bound {exposure_cap}")
+    return violations
+
+
 def run(quick: bool = False, seed: int = 0, write: bool = True) -> dict:
     """Replay the full scenario x config grid; return the artifact payload.
 
@@ -112,7 +200,21 @@ def run(quick: bool = False, seed: int = 0, write: bool = True) -> dict:
     reports["multi_tenant"] = multi
     rows.extend(_rows_from_report("multi_tenant", multi))
 
-    violations = check_rows(rows)
+    # fault-injection scenarios: the trusted-swaps defenses (oracle gate,
+    # canaried promotion, compile-failure quarantine) exercised under
+    # traffic with gate_mode="canary"; one representative config
+    gated = dataclasses.replace(
+        replay_tuning_defaults(), gate_mode="canary")
+    fault_rows: list[dict] = []
+    for sc in fault_scenarios(FAULT_TARGET):
+        report = replay_scenario(
+            sc, {FAULT_CONFIG: configs[FAULT_CONFIG]},
+            seed=seed, config=gated)
+        reports[f"{sc.name}/{FAULT_CONFIG}"] = report
+        fault_rows.extend(_fault_rows_from_report(sc.name, report))
+
+    violations = check_rows(rows) + check_fault_rows(
+        fault_rows, probation=gated.canary_calls)
     payload = {
         "seed": seed,
         "quick": quick,
@@ -122,6 +224,7 @@ def run(quick: bool = False, seed: int = 0, write: bool = True) -> dict:
         "gates": {"max_overhead_pct": MAX_OVERHEAD_PCT,
                   "min_speedup": MIN_SPEEDUP},
         "rows": rows,
+        "fault_rows": fault_rows,
         "reports": reports,
         "violations": violations,
     }
@@ -131,13 +234,18 @@ def run(quick: bool = False, seed: int = 0, write: bool = True) -> dict:
     print(f"\n{len(rows)} rows ({len(configs)} configs x "
           f"{len(scenarios)} scenarios + multi-tenant), "
           f"{n_swapped} with at least one swap")
+    print()
+    print(table(fault_rows, FAULT_COLS,
+                "Fault injection — trusted swaps under attack"))
     if violations:
         print("\nGATE VIOLATIONS:")
         for v in violations:
             print(f"  {v}")
     else:
         print(f"gates OK: overhead <= {MAX_OVERHEAD_PCT}%, "
-              f"speedup >= {MIN_SPEEDUP} on every row")
+              f"speedup >= {MIN_SPEEDUP} on every row; fault rows "
+              "served zero wrong calls, every injected fault tripped "
+              "its defense")
     if write:
         save("scenarios", payload)
     return payload

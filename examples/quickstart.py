@@ -79,8 +79,13 @@ def main_virtual() -> None:
     from repro.core import VirtualClock, VirtualClockEvaluator
 
     clock = VirtualClock()
+    # gate_mode="canary": every variant passes the oracle gate, then
+    # serves a canary fraction of calls before promotion — the trusted
+    # swaps path the fault-injection scenarios exercise under traffic
     session = repro.TuningSession(repro.TuningConfig(
-        max_overhead=1.0, invest=0.5, pump_every=1), clock=clock)
+        max_overhead=1.0, invest=0.5, pump_every=1,
+        gate_mode="canary", canary_fraction=0.5, canary_calls=4),
+        clock=clock)
 
     def cost(unroll: int) -> float:
         return 0.010 / unroll        # known optimum: the largest unroll
@@ -94,22 +99,31 @@ def main_virtual() -> None:
         clock.advance(cost(unroll))  # 'execution' burns simulated time
         return step
 
+    # run the full trace: the last candidate still needs to serve its
+    # canary probation (canary_calls canaried calls) after the explorer
+    # finishes before it can be promoted to incumbent
     for step in range(400):
         kernel(step)
-        handle = kernel.handle
-        if handle is not None and handle.tuner.explorer.finished:
-            break
 
     s = kernel.stats()
     print(f"virtual: explored {s['n_explored']} variants in "
           f"{clock():.3f} simulated s, best {kernel.best_point}, "
           f"gen stall {s['gen_stall_s']:.3f} s")
+    print(f"trusted swaps: {s['gate_checks']} gate checks "
+          f"({s['gate_failures']} failed), {s['canary_calls']} canary "
+          f"calls, {s['canary_promotions']} promotions, "
+          f"{s['rollbacks']} rollbacks, {s['quarantined']} quarantined")
     session.close()
     if kernel.best_point != {"unroll": 8}:
         raise SystemExit(f"did not converge to the optimum: "
                          f"{kernel.best_point}")
     if s["gen_stall_s"] != 0.0:
         raise SystemExit("async generation stalled the hot path")
+    if s["canary_promotions"] < 1:
+        raise SystemExit("no variant survived its canary probation")
+    if s["rollbacks"] or s["quarantined"] or s["gate_failures"]:
+        raise SystemExit("clean variants tripped the trusted-swaps "
+                         "defenses (expected none)")
 
 
 if __name__ == "__main__":

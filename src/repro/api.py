@@ -54,6 +54,7 @@ from repro.core.compilette import (
 )
 from repro.core.decision import LatencyHeadroomGate, RegenerationPolicy
 from repro.core.evaluator import Evaluator
+from repro.core.gate import GATE_MODES
 from repro.core.tuning_space import TuningSpace
 from repro.runtime.coordinator import ManagedTuner, TuningCoordinator
 from repro.runtime.kernel_plane import (
@@ -121,6 +122,11 @@ class TuningConfig:
     kernel_tuning: str = "program"    # off | program | kernel | both
     cache_entries: int | None = 256   # generation-cache entry bound
     cache_bytes: int | None = None    # generation-cache byte bound
+    gate_mode: str = "off"            # off | check | canary (trusted swaps)
+    canary_fraction: float = 0.25     # fraction of calls a canary serves
+    canary_calls: int = 8             # clean canary calls before promotion
+    gate_rtol: float | None = None    # oracle tolerance overrides
+    gate_atol: float | None = None    # (None = per-kernel catalog values)
 
     def __post_init__(self) -> None:
         if self.kernel_tuning not in KERNEL_TUNING_MODES:
@@ -138,6 +144,17 @@ class TuningConfig:
         if self.compile_workers < 1:
             raise ValueError(
                 f"compile_workers must be >= 1, got {self.compile_workers}")
+        if self.gate_mode not in GATE_MODES:
+            raise ValueError(
+                f"gate_mode must be one of {GATE_MODES}, "
+                f"got {self.gate_mode!r}")
+        if not 0.0 < self.canary_fraction <= 1.0:
+            raise ValueError(
+                f"canary_fraction must be in (0, 1], "
+                f"got {self.canary_fraction}")
+        if self.canary_calls < 1:
+            raise ValueError(
+                f"canary_calls must be >= 1, got {self.canary_calls}")
 
     # -------------------------------------------------------- derived views
     @property
@@ -172,13 +189,17 @@ class TuningConfig:
     # field → parser; fields absent here parse as plain strings
     _BOOL_FIELDS = ("enabled", "charge_init", "seq_buckets",
                     "async_generation")
-    _FLOAT_FIELDS = ("max_overhead", "invest")
-    _OPT_FLOAT_FIELDS = ("slo_s", "slo_quantile", "idle_evict_s")
-    _INT_FIELDS = ("pump_every", "prefetch", "compile_workers")
+    _FLOAT_FIELDS = ("max_overhead", "invest", "canary_fraction")
+    _OPT_FLOAT_FIELDS = ("slo_s", "slo_quantile", "idle_evict_s",
+                         "gate_rtol", "gate_atol")
+    _INT_FIELDS = ("pump_every", "prefetch", "compile_workers",
+                   "canary_calls")
     _OPT_INT_FIELDS = ("cache_entries", "cache_bytes")
     _OPT_STR_FIELDS = ("registry_path",)
     # environment/CLI spellings that map onto differently named fields
-    _FIELD_ALIASES = {"autotune": "enabled", "kernel_strategies": "strategies"}
+    _FIELD_ALIASES = {"autotune": "enabled",
+                      "kernel_strategies": "strategies",
+                      "gate": "gate_mode"}
 
     @classmethod
     def _parse_field(cls, field: str, raw: str) -> Any:
@@ -307,6 +328,23 @@ class TuningConfig:
                             "(or deterministic manual batches under a "
                             "virtual clock); process isolates compiles "
                             "in child processes")
+        g.add_argument("--gate-mode", default=base.gate_mode,
+                       choices=list(GATE_MODES),
+                       help="trusted swaps: check gates every variant "
+                            "against the kernel's oracle before it may "
+                            "serve; canary additionally stages promotion "
+                            "behind a serving canary with auto-rollback")
+        g.add_argument("--canary-fraction", type=float,
+                       default=base.canary_fraction,
+                       help="fraction of production calls a canary "
+                            "variant serves before promotion")
+        g.add_argument("--canary-calls", type=int,
+                       default=base.canary_calls,
+                       help="clean canary calls required for promotion")
+        g.add_argument("--gate-rtol", type=float, default=base.gate_rtol,
+                       help="override the per-kernel oracle rtol")
+        g.add_argument("--gate-atol", type=float, default=base.gate_atol,
+                       help="override the per-kernel oracle atol")
         return parser
 
     @classmethod
@@ -346,6 +384,11 @@ class TuningConfig:
             prefetch=args.prefetch,
             compile_workers=args.compile_workers,
             compile_backend=args.compile_backend,
+            gate_mode=args.gate_mode,
+            canary_fraction=args.canary_fraction,
+            canary_calls=args.canary_calls,
+            gate_rtol=args.gate_rtol,
+            gate_atol=args.gate_atol,
         )
 
 
@@ -582,13 +625,18 @@ class TuningSession:
         interpret: bool = True,
         aot: bool = True,
         close_on_scope_exit: bool = False,
+        compilette_hook: Callable[[Any], None] | None = None,
     ) -> None:
         self.config = config if config is not None else TuningConfig()
         # kernel-plane construction kwargs (virtual backend for tests and
-        # benchmarks), applied on the plane's first use
+        # benchmarks), applied on the plane's first use; compilette_hook
+        # runs on every freshly built kernel compilette — the
+        # fault-injection replay harness uses it to install scripted
+        # gate verdicts and wrapped generators
         self._plane_kwargs: dict[str, Any] = dict(
             virtual=virtual, evaluator_factory=evaluator_factory,
-            gen_cost_s=gen_cost_s, interpret=interpret, aot=aot)
+            gen_cost_s=gen_cost_s, interpret=interpret, aot=aot,
+            compilette_hook=compilette_hook)
         self._scope_depth = 0
         self._close_on_scope_exit = bool(close_on_scope_exit)
         self._closed = False
@@ -626,6 +674,11 @@ class TuningSession:
                         free_memory_fn=device_free_memory_bytes)),
                 prefetch=cfg.prefetch,
                 compile_workers=cfg.compile_workers,
+                gate_mode=cfg.gate_mode,
+                canary_fraction=cfg.canary_fraction,
+                canary_calls=cfg.canary_calls,
+                gate_rtol=cfg.gate_rtol,
+                gate_atol=cfg.gate_atol,
             )
         self.coordinator._session = self
         self._plane: KernelTuningPlane | None = getattr(

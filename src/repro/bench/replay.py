@@ -39,6 +39,7 @@ directly visible in the tail quantiles.
 from __future__ import annotations
 
 import dataclasses
+import json
 import math
 import random
 from typing import Any, Callable, Mapping, Sequence
@@ -53,6 +54,8 @@ __all__ = [
     "Trace",
     "bursty_arrivals",
     "choice_mix",
+    "fault_injection_hook",
+    "fault_scenarios",
     "fixed_mix",
     "fleet_scenarios",
     "longtail_mix",
@@ -257,6 +260,13 @@ class Scenario:
     #                               fraction of the reference request cost
     arrival_kwargs: Mapping[str, Any] = dataclasses.field(
         default_factory=dict)
+    # Failure injection (seeded, per tuning point — see
+    # :func:`fault_injection_hook`): ``compile_fail_rate`` makes drawn
+    # points raise at generation time, ``wrong_output_rate`` makes them
+    # fail the variant gate's scripted oracle, ``tail_regression_rate``
+    # makes them measure fast but serve ``tail_factor`` x slower (the
+    # canary's rollback trigger). Empty = clean scenario.
+    faults: Mapping[str, Any] = dataclasses.field(default_factory=dict)
 
 
 def make_trace(scenario: Scenario, tenant: str, rate_hz: float,
@@ -320,6 +330,138 @@ def fleet_scenarios(target_requests: int = 320) -> list[Scenario]:
                  prompt_mix=phase_mix(fixed_mix(256), fixed_mix(1024)),
                  decode_mix=phase_mix(fixed_mix(8), fixed_mix(2)),
                  utilization=0.4, target_requests=target_requests),
+    ]
+
+
+# ============================================================ fault injection
+def _canon_point(point: Mapping[str, Any]) -> str:
+    return json.dumps(dict(point), sort_keys=True, separators=(",", ":"))
+
+
+def _fault_draw(seed: int, kind: str, kernel: str,
+                point: Mapping[str, Any]) -> float:
+    """Deterministic uniform draw per (seed, fault kind, kernel, point).
+
+    String-seeded like the traces, so the same points fault on every
+    host and the replay report stays byte-identical per seed.
+    """
+    key = f"fault:{seed}:{kind}:{kernel}:{_canon_point(point)}"
+    return random.Random(key).random()
+
+
+def _safe_base_point(space: Any) -> Mapping[str, Any]:
+    """The point the auto-tuner's reference variant is generated from.
+
+    Mirrors ``SearchStrategy.__init__``: the space default, falling back
+    to the first valid point when the default is a hole. Faults must
+    never hit it — a process that cannot build its reference variant
+    has no incumbent to roll back to.
+    """
+    base = space.default_point()
+    if not space.is_valid(base):
+        fallback = next(iter(space.iter_valid()), None)
+        if fallback is not None:
+            base = fallback
+    return base
+
+
+def _point_faulted(seed: int, kind: str, comp: Any,
+                   point: Mapping[str, Any], rate: float) -> bool:
+    if rate <= 0.0:
+        return False
+    if _canon_point(point) == _canon_point(_safe_base_point(comp.space)):
+        return False
+    return _fault_draw(seed, kind, comp.name, point) < rate
+
+
+def fault_injection_hook(faults: Mapping[str, Any], seed: int,
+                         clock: Any) -> Callable[[Any], None]:
+    """Compilette hook installing seeded faults (for ``compilette_hook``).
+
+    Three deterministic failure modes, drawn independently per (kernel,
+    tuning point) and never hitting the reference base point:
+
+    * ``compile_fail_rate`` — generation raises (the compile-farm /
+      harvest failure path: billed, quarantined, hole reported);
+    * ``wrong_output_rate`` — the variant gate's scripted oracle
+      (``comp.gate_script``) rejects the point (the virtual analogue of
+      a miscompiled variant producing wrong numerics);
+    * ``tail_regression_rate`` — the generated virtual kernel *lies*:
+      it measures at ``tail_lie`` x its honest cost (so the explorer
+      adopts it) but every production call advances the clock by
+      ``tail_factor`` x the honest cost — exactly the
+      fast-in-microbenchmark, slow-in-production variant the canary
+      state machine exists to roll back.
+    """
+    compile_fail = float(faults.get("compile_fail_rate", 0.0))
+    wrong_output = float(faults.get("wrong_output_rate", 0.0))
+    tail_rate = float(faults.get("tail_regression_rate", 0.0))
+    tail_factor = float(faults.get("tail_factor", 4.0))
+    tail_lie = float(faults.get("tail_lie", 0.25))
+
+    def hook(comp: Any) -> None:
+        if wrong_output > 0.0:
+            comp.gate_script = lambda point, _c=comp: not _point_faulted(
+                seed, "wrong", _c, point, wrong_output)
+        if compile_fail <= 0.0 and tail_rate <= 0.0:
+            return
+        inner = comp._generate
+
+        def generate(point: Mapping[str, Any], **sp: Any):
+            if _point_faulted(seed, "compile", comp, point, compile_fail):
+                raise RuntimeError(
+                    f"injected compile failure: {comp.name} {dict(point)}")
+            fn = inner(dict(point), **sp)
+            if not _point_faulted(seed, "tail", comp, point, tail_rate):
+                return fn
+            honest = getattr(fn, "score_s", None)
+            if honest is None:
+                return fn        # real backend: nothing to lie about
+            extra = honest * max(tail_factor - 1.0, 0.0)
+
+            def lying(*args: Any) -> Any:
+                clock.advance(extra)      # serves slow...
+                return fn(*args)
+
+            lying.score_s = honest * tail_lie   # ...measures fast
+            lying.tag = getattr(fn, "tag", None)
+            return lying
+
+        comp._generate = generate
+
+    return hook
+
+
+def fault_scenarios(target_requests: int = 320) -> list[Scenario]:
+    """Failure-injection scenario set for the trusted-swaps gates.
+
+    One scenario per injected failure mode; drivers run these with
+    ``gate_mode="canary"`` and assert zero wrong-output calls served,
+    at least one gate rejection / rollback, and bounded canary exposure
+    (see ``benchmarks/scenario_fleet.py``).
+    """
+    longtail = longtail_mix(128, 2048, sigma=0.8)
+    return [
+        # compile-failure holes under burst pressure: billed + quarantined
+        # while the serving hot path stays alive
+        Scenario(name="faulty_compiles_burst", arrival=bursty_arrivals,
+                 prompt_mix=longtail, decode_mix=choice_mix(
+                     (2, 4, 16), weights=(0.6, 0.3, 0.1)),
+                 utilization=0.35, target_requests=target_requests,
+                 faults={"compile_fail_rate": 0.25}),
+        # wrong-output variants mid-trace: the gate must reject every one
+        # before it serves a single production call
+        Scenario(name="wrong_output_variant", arrival=poisson_arrivals,
+                 prompt_mix=fixed_mix(512), decode_mix=fixed_mix(4),
+                 utilization=0.4, target_requests=target_requests,
+                 faults={"wrong_output_rate": 0.3}),
+        # measures-fast-serves-slow variants: the canary detects the tail
+        # regression and rolls back to the incumbent automatically
+        Scenario(name="tail_regression", arrival=poisson_arrivals,
+                 prompt_mix=fixed_mix(512), decode_mix=fixed_mix(4),
+                 utilization=0.4, target_requests=target_requests,
+                 faults={"tail_regression_rate": 0.25, "tail_factor": 4.0,
+                         "tail_lie": 0.25}),
     ]
 
 
@@ -441,12 +583,25 @@ def replay(session: Any, trace: Trace,
     busy_s: dict[str, float] = {t: 0.0 for t in trace.tenants}
     host_total_s = 0.0
     last_swap_s: float | None = None
+    # fault-injection bookkeeping (installed by replay_scenario): counts
+    # production calls served by a variant the scenario scripted to be
+    # wrong-output — the trusted-swaps gate requires this stays ZERO
+    fault_seed, faults = getattr(session, "_replay_faults", (0, {}))
+    wrong_rate = float(faults.get("wrong_output_rate", 0.0))
+    served_wrong_calls = 0
 
     def timed_call(handle: Any, tenant: str) -> None:
+        nonlocal served_wrong_calls
         c0 = clock()
         handle(0)
         busy_s[tenant] += clock() - c0
         ref_s[tenant] += handle.tuner.reference_score_s
+        if wrong_rate > 0.0:
+            served = handle.tuner.last_served_point
+            if served is not None and _point_faulted(
+                    fault_seed, "wrong", handle.tuner.compilette,
+                    served, wrong_rate):
+                served_wrong_calls += 1
 
     for req in trace.requests:
         arrival = t0 + req.t_arrival_s
@@ -531,6 +686,17 @@ def replay(session: Any, trace: Trace,
             # crossover), > 1.0 means net win all-in
             "speedup_all_in": (ref_total / all_in_denominator
                                if all_in_denominator > 0 else 1.0),
+            # trusted swaps: oracle-gate + canary counters (all zero in
+            # gate_mode="off") and the fault-injection correctness gate
+            "gate_mode": stats["gate_mode"],
+            "gate_spent_s": stats["gate_spent_s"],
+            "gate_checks": stats["gate_checks"],
+            "gate_failures": stats["gate_failures"],
+            "canary_calls": stats["canary_calls"],
+            "canary_promotions": stats["canary_promotions"],
+            "rollbacks": stats["rollbacks"],
+            "quarantined": stats["quarantined"],
+            "served_wrong_calls": served_wrong_calls,
         },
     }
 
@@ -554,7 +720,9 @@ def replay_session(clock: Any, *, config: Any | None = None,
                    profile: DeviceProfile = TPU_V5E,
                    gen_cost_s: float = GEN_COST_S,
                    device: str = REPLAY_DEVICE,
-                   registry: Any | None = None) -> "Any":
+                   registry: Any | None = None,
+                   compilette_hook: Callable[[Any], None] | None = None,
+                   ) -> "Any":
     """A ``TuningSession`` on the virtual cost-model kernel backend."""
     from repro.api import TuningSession
 
@@ -562,7 +730,8 @@ def replay_session(clock: Any, *, config: Any | None = None,
         config if config is not None else replay_tuning_defaults(),
         clock=clock, device=device, registry=registry,
         virtual=(clock, profile), gen_cost_s=gen_cost_s,
-        evaluator_factory=lambda comp: VirtualClockEvaluator(clock))
+        evaluator_factory=lambda comp: VirtualClockEvaluator(clock),
+        compilette_hook=compilette_hook)
 
 
 def replay_scenario(scenario: Scenario, configs: Mapping[str, Any],
@@ -602,8 +771,13 @@ def replay_scenario(scenario: Scenario, configs: Mapping[str, Any],
     trace = (traces[0] if n_tenants == 1
              else merge_traces(scenario.name, traces))
     clock = VirtualClock()
+    hook = (fault_injection_hook(scenario.faults, seed, clock)
+            if scenario.faults else None)
     session = replay_session(clock, config=config, profile=profile,
-                             gen_cost_s=gen_cost_s)
+                             gen_cost_s=gen_cost_s, compilette_hook=hook)
+    # replay() reads this back to count wrong-output calls served (the
+    # same deterministic draws the hook's scripted gate uses)
+    session._replay_faults = (seed, dict(scenario.faults))
     try:
         return session.replay(trace, dict(configs), batch=batch)
     finally:

@@ -40,6 +40,7 @@ from repro.core.explorer import (
     make_strategy,
     register_strategy,
 )
+from repro.core.gate import GATE_MODES, VariantGate
 from repro.core.persistence import (
     TunedRegistry,
     compiler_version,
@@ -80,6 +81,8 @@ __all__ = [
     "mean_real_time",
     "virtual_compilette",
     "virtual_kernel",
+    "GATE_MODES",
+    "VariantGate",
     "SearchStrategy",
     "TwoPhaseExplorer",
     "RandomSearch",

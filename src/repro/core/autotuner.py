@@ -49,6 +49,7 @@ from repro.core.decision import (
 )
 from repro.core.evaluator import Measurement
 from repro.core.explorer import SearchStrategy, make_strategy
+from repro.core.gate import GATE_MODES, VariantGate
 from repro.core.tuning_space import Point
 
 # An external arbiter for regeneration budget (the coordinator's shared
@@ -63,6 +64,26 @@ class KernelLife:
     point: Point | None           # None = the reference function
     score_s: float
     calls: int = 0
+
+
+# A canary call whose MEAN observed latency exceeds the incumbent's
+# per-call score by this factor is a tail regression: roll back. The
+# threshold compares the canary against the *incumbent it wants to
+# replace* (a variant that measured fast but serves slow must not survive
+# just because it beats its own lie), and uses the running mean so one
+# noisy real-hardware call does not condemn a good point outright.
+CANARY_REGRESSION_FACTOR = 1.5
+
+
+@dataclasses.dataclass
+class _CanaryState:
+    """A gated variant serving a fraction of calls before promotion."""
+
+    fn: Callable[..., Any]
+    life: KernelLife              # shares the _lives gain accounting
+    served: int = 0
+    total_call_s: float = 0.0
+    max_call_s: float = 0.0
 
 
 class OnlineAutotuner:
@@ -83,13 +104,38 @@ class OnlineAutotuner:
         clock: Callable[[], float] | None = None,
         budget_gate: BudgetGate | None = None,
         generator: CompileFarm | None = None,
+        gate: VariantGate | None = None,
+        gate_mode: str = "off",
+        canary_fraction: float = 0.25,
+        canary_calls: int = 8,
+        quarantine_cb: Callable[[Point, str], None] | None = None,
     ) -> None:
+        if gate_mode not in GATE_MODES:
+            raise ValueError(
+                f"gate_mode must be one of {GATE_MODES}, got {gate_mode!r}")
         self.compilette = compilette
         self.evaluator = evaluator
         self.policy = policy or RegenerationPolicy()
         self.specialization = dict(specialization or {})
         self._clock = clock or time.perf_counter
         self._budget_gate = budget_gate
+        # --- trusted swaps: oracle gate + canary state machine ------------
+        # "off" promotes on measurement alone (pre-gate behavior); "check"
+        # runs the oracle gate before the swap; "canary" additionally
+        # stages promotion: the variant serves ~canary_fraction of calls,
+        # its observed latency compared against the incumbent, with
+        # automatic rollback + quarantine on regression or exception.
+        self._gate = gate
+        self._gate_mode = gate_mode
+        self._canary: _CanaryState | None = None
+        fraction = min(max(float(canary_fraction), 1e-6), 1.0)
+        self._canary_period = max(1, round(1.0 / fraction))
+        self._canary_calls = max(1, int(canary_calls))
+        self._quarantine_cb = quarantine_cb
+        # point whose variant served the most recent __call__ (None = the
+        # reference function) — lets harnesses attribute every production
+        # call to the exact variant that produced its output
+        self.last_served_point: Point | None = None
         # Double-buffered generation: when an AsyncGenerator is injected
         # (by the coordinator), wake() REQUESTS the next variant and keeps
         # the current active_fn serving until the compile is ready.
@@ -158,8 +204,13 @@ class OnlineAutotuner:
         return self.explorer.best_point
 
     def __call__(self, *args: Any) -> Any:
-        out = self._active(*args)
-        self._active_life.calls += 1
+        if (self._canary is not None
+                and self.accounts.kernel_calls % self._canary_period == 0):
+            out = self._serve_canary(args)
+        else:
+            out = self._active(*args)
+            self._active_life.calls += 1
+            self.last_served_point = self._active_life.point
         self.accounts.kernel_calls += 1
         if (
             self._thread is None
@@ -168,6 +219,68 @@ class OnlineAutotuner:
         ):
             self.wake()
         return out
+
+    # ------------------------------------------------------------- canary
+    def _serve_canary(self, args: tuple) -> Any:
+        """Serve one production call through the canary variant.
+
+        An exception rolls back to the incumbent (which then serves the
+        call — the caller never sees the canary's failure); a mean
+        observed latency beyond ``CANARY_REGRESSION_FACTOR`` x the
+        incumbent's per-call score is a tail regression and also rolls
+        back. After ``canary_calls`` clean served calls the canary is
+        promoted to incumbent.
+        """
+        canary = self._canary
+        t0 = self._clock()
+        try:
+            out = canary.fn(*args)
+        except Exception as e:
+            self._rollback(canary, f"canary raised: {e!r}")
+            out = self._active(*args)
+            self._active_life.calls += 1
+            self.last_served_point = self._active_life.point
+            return out
+        call_s = self._clock() - t0
+        canary.served += 1
+        canary.life.calls += 1
+        canary.total_call_s += call_s
+        canary.max_call_s = max(canary.max_call_s, call_s)
+        self.accounts.canary_calls += 1
+        self.last_served_point = canary.life.point
+        mean_s = canary.total_call_s / canary.served
+        limit_s = CANARY_REGRESSION_FACTOR * max(
+            self._active_life.score_s, 1e-12)
+        if mean_s > limit_s:
+            # keep gain/busy estimates honest: the tenure served at the
+            # observed latency, not at the score the variant measured
+            canary.life.score_s = mean_s
+            self._rollback(
+                canary,
+                f"tail regression: mean {mean_s:.3e}s vs incumbent "
+                f"{self._active_life.score_s:.3e}s")
+        elif canary.served >= self._canary_calls:
+            self._promote(canary)
+        return out
+
+    def _rollback(self, canary: _CanaryState, reason: str) -> None:
+        self._canary = None
+        self.accounts.rollbacks += 1
+        self._quarantine(canary.life.point, reason)
+
+    def _promote(self, canary: _CanaryState) -> None:
+        self._active = canary.fn
+        self._active_life = canary.life
+        self._canary = None
+        self.accounts.swaps += 1
+        self.accounts.canary_promotions += 1
+
+    def _quarantine(self, point: Point, reason: str) -> None:
+        """Never trust this point again: strategy + (via cb) registry."""
+        self.accounts.quarantined += 1
+        self.explorer.quarantine(point)
+        if self._quarantine_cb is not None:
+            self._quarantine_cb(dict(point), reason)
 
     # ------------------------------------------------------------ gains
     def _update_gains(self) -> None:
@@ -263,10 +376,14 @@ class OnlineAutotuner:
                     return False   # still compiling; hot path unstalled
                 self._pending = None
                 if ticket.error is not None:
-                    # late-found hole: charge the wasted compile, move on
+                    # late-found hole: charge the wasted compile,
+                    # quarantine the point (a failing compile is as
+                    # untrusted as a failing oracle), move on
                     self.accounts.tuning_spent_s += ticket.gen_charge_s
                     self.accounts.gen_spent_s += ticket.gen_charge_s
                     self.explorer.report(ticket.point, float("inf"))
+                    self._quarantine(
+                        ticket.point, f"generation failed: {ticket.error!r}")
                     return False
                 return self._measure_and_swap(
                     ticket.point, ticket.kern,
@@ -294,6 +411,8 @@ class OnlineAutotuner:
                     return False
                 if ticket.error is not None:
                     self.explorer.report(point, float("inf"))
+                    self._quarantine(
+                        point, f"generation failed: {ticket.error!r}")
                     return False
                 # cache hit: ready now at zero cost — evaluate in place
                 # (ticket.stalled covers the rare eviction race where the
@@ -307,16 +426,18 @@ class OnlineAutotuner:
                 kern: GeneratedKernel = self.compilette.generate(
                     point, **self.specialization
                 )
-            except Exception:
+            except Exception as e:
                 # Generation failures are holes discovered late: record the
-                # spent time and move on (the paper's "could not generate
-                # code" entries). The whole interval is generation (the
-                # evaluation never started), and it stalled this wake.
+                # spent time, quarantine the point and move on (the paper's
+                # "could not generate code" entries). The whole interval is
+                # generation (the evaluation never started), and it stalled
+                # this wake.
                 spent = self._clock() - t0
                 self.accounts.tuning_spent_s += spent
                 self.accounts.gen_spent_s += spent
                 self.accounts.gen_stall_s += spent
                 self.explorer.report(point, float("inf"))
+                self._quarantine(point, f"generation failed: {e!r}")
                 return False
             compiled = kern.meta.get("source", "compiled") == "compiled"
             if (compiled and kern.meta.get("simulated")
@@ -355,7 +476,7 @@ class OnlineAutotuner:
 
         try:
             measurement: Measurement = self.evaluator.evaluate(kern.fn)
-        except Exception:
+        except Exception as e:
             eval_s = self._clock() - t_eval
             start = wall_t0 if wall_t0 is not None else t_eval
             spent = self._clock() - start
@@ -363,6 +484,7 @@ class OnlineAutotuner:
                 spent += gen_charge_s
             _charge(spent, eval_s)
             self.explorer.report(point, float("inf"))
+            self._quarantine(point, f"evaluation raised: {e!r}")
             return False
         eval_s = self._clock() - t_eval
         if wall_t0 is not None:
@@ -376,13 +498,32 @@ class OnlineAutotuner:
             if self._cost_ema is None
             else 0.5 * self._cost_ema + 0.5 * spent
         )
+        # --- variant gate: oracle check before the point may serve -------
+        if self._gate_mode != "off" and self._gate is not None:
+            t_gate = self._clock()
+            ok, reason = self._gate.check(point, kern.fn)
+            gate_s = self._clock() - t_gate
+            self.accounts.tuning_spent_s += gate_s
+            self.accounts.gate_spent_s += gate_s
+            self.accounts.gate_checks += 1
+            if not ok:
+                self.accounts.gate_failures += 1
+                self._quarantine(point, reason)
+                self.explorer.report(point, float("inf"))
+                return False
         is_best = self.explorer.report(point, measurement.score_s)
         if is_best and measurement.score_s < self._active_life.score_s:
+            life = KernelLife(point=dict(point), score_s=measurement.score_s)
+            self._lives.append(life)
+            if self._gate_mode == "canary":
+                # staged promotion: CANDIDATE -> CANARY. The incumbent
+                # keeps serving most calls; a newer, better candidate
+                # simply supersedes an unfinished canary (no quarantine —
+                # it did nothing wrong, it just lost).
+                self._canary = _CanaryState(fn=kern.fn, life=life)
+                return False
             self._active = kern.fn
-            self._active_life = KernelLife(
-                point=dict(point), score_s=measurement.score_s
-            )
-            self._lives.append(self._active_life)
+            self._active_life = life
             self.accounts.swaps += 1
             return True
         return False
@@ -456,6 +597,15 @@ class OnlineAutotuner:
             "gen_stall_s": self.accounts.gen_stall_s,
             "eval_spent_s": self.accounts.eval_spent_s,
             "generation_in_flight": self.generation_in_flight,
+            "gate_mode": self._gate_mode,
+            "gate_spent_s": self.accounts.gate_spent_s,
+            "gate_checks": self.accounts.gate_checks,
+            "gate_failures": self.accounts.gate_failures,
+            "canary_calls": self.accounts.canary_calls,
+            "canary_promotions": self.accounts.canary_promotions,
+            "canary_in_flight": self._canary is not None,
+            "rollbacks": self.accounts.rollbacks,
+            "quarantined": self.accounts.quarantined,
             "gained_s": self.accounts.gained_s,
             "overhead_frac": (
                 self.accounts.tuning_spent_s / elapsed if elapsed > 0 else 0.0

@@ -137,6 +137,10 @@ class CompileFarm:
         self.rejected_speculative = 0
         self.process_offloaded = 0
         self.process_fallbacks = 0
+        # escapes caught by _run_safe (raises past _run's own generate
+        # catch, e.g. a non-canonicalizable point key or a raising
+        # speculative charge callback) — each one used to kill a worker
+        self.worker_errors = 0
 
     # ------------------------------------------------------------ lifecycle
     def _spawn_locked(self) -> None:
@@ -158,28 +162,35 @@ class CompileFarm:
         # per-request one that was never close()d — does not pin blocked
         # daemon threads for the life of the process.
         me = threading.current_thread()
-        while True:
-            with self._cv:
-                while not self._heap:
-                    if self._stopping:
-                        self._threads.discard(me)
-                        return
-                    if not self._cv.wait(self.worker_idle_timeout_s):
-                        # idle timeout with the queue STILL empty: retire
-                        # inside the same critical section submit pushes
-                        # under — a concurrent enqueue either lands
-                        # before this check (and is served) or after the
-                        # deregistration (and spawns a replacement)
-                        if not self._heap:
-                            self._threads.discard(me)
-                            return
-                ticket = heapq.heappop(self._heap)[-1]
-                self._busy += 1
-            try:
-                self._run(ticket)
-            finally:
+        try:
+            while True:
                 with self._cv:
-                    self._busy -= 1
+                    while not self._heap:
+                        if self._stopping:
+                            return
+                        if not self._cv.wait(self.worker_idle_timeout_s):
+                            # idle timeout with the queue STILL empty:
+                            # retire inside the same critical section
+                            # submit pushes under — a concurrent enqueue
+                            # either lands before this check (and is
+                            # served) or after the deregistration (and
+                            # spawns a replacement)
+                            if not self._heap:
+                                return
+                    ticket = heapq.heappop(self._heap)[-1]
+                    self._busy += 1
+                try:
+                    self._run_safe(ticket)
+                finally:
+                    with self._cv:
+                        self._busy -= 1
+        finally:
+            # Whatever path ends this loop, the thread MUST leave the
+            # registry: _spawn_locked sizes the pool by |_threads|, so a
+            # dead-but-registered thread would permanently occupy a slot
+            # (the dead-worker bug the safe runner exists to prevent).
+            with self._cv:
+                self._threads.discard(me)
 
     def shutdown(self) -> None:
         """Drain queued jobs, stop the workers, release the process pool.
@@ -274,12 +285,24 @@ class CompileFarm:
             kern.meta["process_pid"] = child[1]
         elif child is not None:
             failed_charge += child[0]
+        try:
+            key = ticket.compilette.cache_key(
+                ticket.point, ticket.specialization)
+        except BaseException as e:
+            # a point that cannot be canonicalized cannot be keyed — and
+            # must not kill the worker holding the farm lock. Treat it
+            # like a generation failure (the variant is unusable either
+            # way) and fall back to an identity scan for the inflight
+            # entry, which was registered under the same raising key
+            # path only if submit managed to compute it.
+            key = None
+            if err is None:
+                kern, err = None, e.with_traceback(None)
         with self._mu:
             ticket.kern = kern
             ticket.error = err
-            if err is not None:
-                self._failed[ticket.compilette.cache_key(
-                    ticket.point, ticket.specialization)] = err
+            if err is not None and key is not None:
+                self._failed[key] = err
             charge = (kern.generation_time_s if kern is not None
                       else failed_charge)
             if ticket.speculative and ticket._charge_cb is not None:
@@ -289,9 +312,13 @@ class CompileFarm:
             else:
                 cb, ticket.gen_charge_s = None, charge
             ticket.done = True
-            self._inflight.pop(
-                ticket.compilette.cache_key(
-                    ticket.point, ticket.specialization), None)
+            if key is not None:
+                self._inflight.pop(key, None)
+            else:
+                for k, t in list(self._inflight.items()):
+                    if t is ticket:
+                        del self._inflight[k]
+                        break
             self._kernel_uncount(ticket.compilette.name)
             if err is None:
                 self.completed += 1
@@ -299,8 +326,46 @@ class CompileFarm:
                 self.failed += 1
         if cb is not None:
             # outside the lock: the callback charges tuner/coordinator
-            # accounts and may take their locks
-            cb(ticket, charge)
+            # accounts and may take their locks — and may raise; the
+            # ticket is already complete, so the failure is the
+            # callback owner's, not the worker's
+            try:
+                cb(ticket, charge)
+            except BaseException:
+                with self._mu:
+                    self.worker_errors += 1
+
+    def _run_safe(self, ticket: GenerationTicket) -> None:
+        """``_run`` that never raises: the worker-pool survival guarantee.
+
+        ``_run`` already converts a raising ``generate`` into a
+        failed-harvest ticket; this belt-and-suspenders wrapper converts
+        any *remaining* escape the same way, because an exception
+        crossing the worker loop used to kill the thread while it stayed
+        registered in ``_threads`` — permanently shrinking the pool
+        below M (``_spawn_locked`` sizes by registered threads). Manual
+        mode shares the guarantee: an escape here would otherwise crash
+        the coordinator's pump thread mid-request.
+        """
+        try:
+            self._run(ticket)
+            return
+        except BaseException as e:
+            err = e.with_traceback(None)
+        with self._mu:
+            self.worker_errors += 1
+            if ticket.done:
+                return   # completed before the escape: books are settled
+            ticket.kern = None
+            ticket.error = err
+            ticket.gen_charge_s = 0.0
+            ticket.done = True
+            self.failed += 1
+            self._kernel_uncount(ticket.compilette.name)
+            for k, t in list(self._inflight.items()):
+                if t is ticket:
+                    del self._inflight[k]
+                    break
 
     def _kernel_uncount(self, name: str) -> None:
         n = self._kernel_inflight.get(name, 0) - 1
@@ -324,7 +389,7 @@ class CompileFarm:
                 if not self._heap:
                     return n
                 ticket = heapq.heappop(self._heap)[-1]
-            self._run(ticket)
+            self._run_safe(ticket)
             n += 1
         return n
 
@@ -484,6 +549,7 @@ class CompileFarm:
                 "rejected_speculative": self.rejected_speculative,
                 "process_offloaded": self.process_offloaded,
                 "process_fallbacks": self.process_fallbacks,
+                "worker_errors": self.worker_errors,
                 "in_flight": len(self._inflight),
             }
 

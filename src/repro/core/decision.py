@@ -134,6 +134,19 @@ class TuningAccounts:
     kernel_calls: int = 0               # invocation counter (instrumentation)
     regenerations: int = 0              # variants generated+evaluated
     swaps: int = 0                      # active-function replacements
+    # --- trusted swaps (gate + canary state machine) -------------------
+    gate_spent_s: float = 0.0           # oracle-check component of
+                                        # tuning_spent_s (one variant
+                                        # execution + comparison per check)
+    gate_checks: int = 0                # oracle checks performed
+    gate_failures: int = 0              # variants the oracle rejected
+    canary_calls: int = 0               # production calls served by a
+                                        # canary (not yet promoted) variant
+    canary_promotions: int = 0          # canaries promoted to incumbent
+    rollbacks: int = 0                  # canaries rolled back (tail
+                                        # regression or raised exception)
+    quarantined: int = 0                # points quarantined (gate failure,
+                                        # rollback, or generation failure)
 
 
 @dataclasses.dataclass(frozen=True)

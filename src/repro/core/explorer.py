@@ -117,6 +117,10 @@ class SearchStrategy:
         self.best_score: float = float("inf")
         self.history: list[tuple[Point, float]] = []
         self._seen: set[tuple] = set()
+        # quarantined points: rejected by the variant gate (wrong output),
+        # rolled back by the canary, or failed to generate — never proposed
+        # again and never reported as best (see ``quarantine``).
+        self._quarantined: set[tuple] = set()
         # peek(n) buffer: upcoming proposals drawn ahead of consumption;
         # next_point() serves from here first, so peeked order == proposed
         # order (absent intervening reports that reshape the search).
@@ -200,6 +204,38 @@ class SearchStrategy:
             self.best_point = dict(point)
         self._observe(point, score_s, improved)
         return improved
+
+    def quarantine(self, point: Point) -> None:
+        """Mark ``point`` untrusted: never re-propose, never call it best.
+
+        Idempotent. The point joins the seen set (so ``_propose``
+        duplicates are swallowed and restart scans skip it), is purged
+        from the peek buffer, and — if it currently holds the best slot —
+        the best is recomputed from the reported history excluding every
+        quarantined point, so a registry flush after a rollback persists
+        the best *trusted* point.
+        """
+        key = self.space.key(point)
+        self._quarantined.add(key)
+        self._seen.add(key)
+        if self._peeked:
+            self._peeked = [
+                p for p in self._peeked if self.space.key(p) != key]
+        if (self.best_point is not None
+                and self.space.key(self.best_point) == key):
+            self.best_point, self.best_score = None, float("inf")
+            for p, s in self.history:
+                if self.space.key(p) in self._quarantined:
+                    continue
+                if s < self.best_score:
+                    self.best_score, self.best_point = s, dict(p)
+
+    def is_quarantined(self, point: Point) -> bool:
+        return self.space.key(point) in self._quarantined
+
+    @property
+    def n_quarantined(self) -> int:
+        return len(self._quarantined)
 
     @property
     def finished(self) -> bool:

@@ -115,6 +115,15 @@ class TunedRegistry:
 
     def __init__(self, *, max_idle_saves: int | None = 64) -> None:
         self._table: dict[str, dict[str, Any]] = {}
+        # Quarantine: per registry key, canonical-point -> reason for
+        # points the variant gate rejected or the canary rolled back. A
+        # quarantined point is never returned by lookups, never accepted
+        # by ``put``, and survives save/load — a bad point is never
+        # re-trusted after a warm start. Unlike best-point entries it
+        # does NOT age out with idle saves (bad stays bad); only a
+        # compiler change invalidates it (the variant it condemned no
+        # longer exists).
+        self._quarantine: dict[str, dict[str, str]] = {}
         self._mu = threading.Lock()
         self._generation = 0
         self.max_idle_saves = max_idle_saves
@@ -135,6 +144,8 @@ class TunedRegistry:
     ) -> None:
         k = self.key(kernel, specialization, device)
         with self._mu:
+            if _canon(dict(point)) in self._quarantine.get(k, {}):
+                return   # a condemned point never re-enters the registry
             cur = self._table.get(k)
             if cur is None or score_s < cur["score_s"]:
                 entry = {"point": dict(point), "score_s": float(score_s),
@@ -151,9 +162,12 @@ class TunedRegistry:
         self, kernel: str, specialization: dict[str, Any], device: str
     ) -> Point | None:
         with self._mu:
-            entry = self._table.get(self.key(kernel, specialization, device))
+            k = self.key(kernel, specialization, device)
+            entry = self._table.get(k)
             if entry is None:
                 return None
+            if _canon(entry["point"]) in self._quarantine.get(k, {}):
+                return None   # defensive: quarantine always wins
             entry["gen"] = self._generation   # last-used stamp
             return dict(entry["point"])
 
@@ -173,6 +187,63 @@ class TunedRegistry:
     def __len__(self) -> int:
         with self._mu:
             return len(self._table)
+
+    # ---------------------------------------------------------- quarantine
+    def quarantine(
+        self,
+        kernel: str,
+        specialization: dict[str, Any],
+        device: str,
+        point: Point,
+        reason: str = "",
+    ) -> None:
+        """Condemn ``point`` for this (kernel, spec, device) permanently.
+
+        Drops a matching best entry (so warm starts can never seed it)
+        and records the point + reason in the persisted quarantine table.
+        """
+        k = self.key(kernel, specialization, device)
+        pk = _canon(dict(point))
+        with self._mu:
+            self._quarantine.setdefault(k, {})[pk] = str(reason)
+            cur = self._table.get(k)
+            if cur is not None and _canon(cur.get("point", {})) == pk:
+                del self._table[k]
+
+    def is_quarantined(
+        self,
+        kernel: str,
+        specialization: dict[str, Any],
+        device: str,
+        point: Point,
+    ) -> bool:
+        k = self.key(kernel, specialization, device)
+        with self._mu:
+            return _canon(dict(point)) in self._quarantine.get(k, {})
+
+    def quarantined_points(
+        self, kernel: str, specialization: dict[str, Any], device: str
+    ) -> list[Point]:
+        """Condemned points under the exact key AND the legacy fallbacks."""
+        out: list[Point] = []
+        seen: set[str] = set()
+        with self._mu:
+            for dev in (device, *device_fallbacks(device)):
+                k = self.key(kernel, specialization, dev)
+                for pk in self._quarantine.get(k, {}):
+                    if pk in seen:
+                        continue
+                    seen.add(pk)
+                    try:
+                        out.append(dict(json.loads(pk)))
+                    except (json.JSONDecodeError, TypeError):
+                        continue
+        return out
+
+    @property
+    def n_quarantined(self) -> int:
+        with self._mu:
+            return sum(len(v) for v in self._quarantine.values())
 
     # ---------------------------------------------------------- compaction
     @staticmethod
@@ -203,6 +274,12 @@ class TunedRegistry:
         for k in dead:
             del self._table[k]
         self.compacted_total += len(dead)
+        # quarantine entries only die with the compiler that condemned
+        # them — the exact variant no longer exists afterwards
+        for k in [k for k in self._quarantine
+                  if (c := self._entry_compiler(k)) is not None
+                  and c != current]:
+            del self._quarantine[k]
         return len(dead)
 
     # ------------------------------------------------------------------ io
@@ -210,8 +287,11 @@ class TunedRegistry:
         with self._mu:
             self._generation += 1
             self._compact_locked()
-            snapshot: dict[str, Any] = {
-                _META_KEY: {"generation": self._generation}}
+            meta: dict[str, Any] = {"generation": self._generation}
+            if self._quarantine:
+                meta["quarantine"] = {
+                    k: dict(v) for k, v in self._quarantine.items()}
+            snapshot: dict[str, Any] = {_META_KEY: meta}
             snapshot.update(
                 {k: dict(v) for k, v in self._table.items()})
         os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
@@ -236,9 +316,16 @@ class TunedRegistry:
                     table = json.load(f)
                 if isinstance(table, dict):
                     meta = table.pop(_META_KEY, None)
-                    if (isinstance(meta, dict)
-                            and isinstance(meta.get("generation"), int)):
-                        reg._generation = meta["generation"]
+                    if isinstance(meta, dict):
+                        if isinstance(meta.get("generation"), int):
+                            reg._generation = meta["generation"]
+                        quar = meta.get("quarantine")
+                        if isinstance(quar, dict):
+                            reg._quarantine = {
+                                k: {pk: str(r) for pk, r in v.items()}
+                                for k, v in quar.items()
+                                if isinstance(v, dict)
+                            }
                     reg._table = {
                         k: v for k, v in table.items()
                         if isinstance(v, dict)

@@ -65,8 +65,29 @@ __all__ = [
     "KernelCatalog",
     "compile_in_process",
     "discover_kernels",
+    "example_fill",
     "get_catalog",
 ]
+
+
+def example_fill(shape: tuple[int, ...], dtype: Any, *,
+                 scale: float = 1.0) -> Any:
+    """Deterministic non-constant example array for ``example_args``.
+
+    Constant fills make the variant gate vacuous for some kernels —
+    e.g. euclidean distances between identical all-ones rows are exactly
+    zero, so any multiplicative corruption compares equal to the oracle.
+    A short repeating ramp keeps outputs non-degenerate while staying
+    cheap, seedless and bit-identical across processes. ``scale`` caps
+    the amplitude for kernels that exponentiate (attention softmax).
+    """
+    import jax.numpy as jnp
+
+    n = 1
+    for s in shape:
+        n *= int(s)
+    vals = ((jnp.arange(n, dtype=jnp.float32) % 13.0) - 6.0) / 6.0 * scale
+    return vals.reshape(shape).astype(dtype)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -96,6 +117,13 @@ class KernelDef:
     # under it, so editing a kernel's source cold-starts exactly that
     # kernel instead of warm-starting from stale bests
     source_hash: str | None = None
+    # correctness reference: ``oracle(*example_args(spec))`` computes the
+    # ground-truth output the variant gate compares a freshly generated
+    # variant against (the kernel's ``ref.py``); ``tolerance`` supplies
+    # per-kernel {"rtol": ..., "atol": ...} bounds for that comparison
+    # (kernels accumulating in low precision declare looser ones)
+    oracle: Callable[..., Any] | None = None
+    tolerance: Mapping[str, float] | None = None
 
 
 class KernelCompilette(Compilette):
@@ -138,6 +166,14 @@ class KernelCompilette(Compilette):
         self.virtual = virtual
         self.aot_compiles = 0
         self.aot_fallbacks = 0
+        # correctness gate hooks (read by repro.core.gate.VariantGate):
+        # the catalog oracle + tolerances, and an optional scripted
+        # verdict ``gate_script(point) -> bool`` — the deterministic
+        # pass/fail the virtual backend uses in place of real numerics
+        # (installed by tests and the fault-injection replay harness)
+        self.oracle = defn.oracle
+        self.tolerance = dict(defn.tolerance) if defn.tolerance else None
+        self.gate_script: Callable[[Point], bool] | None = None
 
         cost_model = None
         if defn.cost_model is not None:

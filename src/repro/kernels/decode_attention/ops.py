@@ -31,7 +31,8 @@ from repro.core.tuning_space import (
     clamped_options,
 )
 from repro.kernels.attention.ops import decode_attention
-from repro.kernels.catalog import KernelDef
+from repro.kernels.catalog import KernelDef, example_fill
+from repro.kernels.decode_attention.ref import decode_attention_ref
 
 DEFAULT_POINT: Point = {"k_chunk": 512}
 
@@ -119,7 +120,7 @@ def _abstract_args(spec: dict[str, Any]) -> tuple:
 
 
 def _example_args(spec: dict[str, Any]) -> tuple:
-    arrays = tuple(jnp.ones(s, d) * 0.1 for s, d in _shapes(spec))
+    arrays = tuple(example_fill(s, d, scale=0.1) for s, d in _shapes(spec))
     return arrays + (jnp.int32(spec["S"]),)
 
 
@@ -133,6 +134,10 @@ KERNEL = KernelDef(
     abstract_args=_abstract_args,
     example_args=_example_args,
     default_point=DEFAULT_POINT,
+    oracle=decode_attention_ref,
+    # online-softmax accumulation vs the naive full softmax: f32 math,
+    # but the rescaling path reorders every sum
+    tolerance={"rtol": 2e-3, "atol": 1e-5},
 )
 
 

@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for decode attention (naive full-softmax over the cache).
+
+Mirrors :func:`repro.kernels.attention.ops.decode_attention` semantics —
+one new query token attending over a (possibly partially filled) KV cache
+with GQA head grouping — without any chunking or online softmax, so the
+tuned flash-decoding variants have a ground truth to be gated against.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def decode_attention_ref(
+    q: jax.Array,      # (B, 1, H, Dh) — one new token
+    k: jax.Array,      # (B, S, Hk, Dh) KV cache
+    v: jax.Array,
+    length: jax.Array | int | None = None,
+    scale: float | None = None,
+) -> jax.Array:
+    B, Tq, H, Dh = q.shape
+    _, S, Hk, _ = k.shape
+    G = H // Hk
+    scale = float(scale if scale is not None else Dh ** -0.5)
+
+    qg = q.reshape(B, Tq, Hk, G, Dh).astype(jnp.float32)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k.astype(jnp.float32)) * scale
+    if length is not None:
+        len_b = jnp.asarray(length).reshape(-1, 1)      # scalar or per-batch
+        valid = jnp.arange(S)[None, :] < len_b          # (1 or B, S)
+        s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return o.reshape(B, Tq, H, Dh).astype(q.dtype)

@@ -24,7 +24,7 @@ import jax.numpy as jnp
 from repro.core.compilette import Compilette
 from repro.core.profiles import TPU_V5E, DeviceProfile
 from repro.core.tuning_space import Param, Point, TuningSpace
-from repro.kernels.catalog import KernelDef
+from repro.kernels.catalog import KernelDef, example_fill
 from repro.kernels.euclid.euclid import euclid_pallas
 from repro.kernels.euclid.ref import euclid_ref
 
@@ -249,7 +249,9 @@ def _abstract_args(spec: dict[str, Any]) -> tuple:
 
 
 def _example_args(spec: dict[str, Any]) -> tuple:
-    return tuple(jnp.ones(s, d) for s, d in _shapes(spec))
+    # non-constant fill: with identical rows every distance is exactly 0
+    # and the variant gate's oracle comparison can't see corruption
+    return tuple(example_fill(s, d) for s, d in _shapes(spec))
 
 
 KERNEL = KernelDef(
@@ -261,6 +263,9 @@ KERNEL = KernelDef(
     abstract_args=_abstract_args,
     example_args=_example_args,
     default_point=DEFAULT_POINT,
+    oracle=euclid_ref,
+    # chunked/unrolled f32 accumulation vs the naive single-axis sum
+    tolerance={"rtol": 1e-3, "atol": 1e-5},
 )
 
 

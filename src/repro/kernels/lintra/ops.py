@@ -16,7 +16,7 @@ import jax.numpy as jnp
 from repro.core.compilette import Compilette
 from repro.core.profiles import TPU_V5E, DeviceProfile
 from repro.core.tuning_space import Param, Point, TuningSpace
-from repro.kernels.catalog import KernelDef
+from repro.kernels.catalog import KernelDef, example_fill
 from repro.kernels.lintra.lintra import lintra_pallas
 from repro.kernels.lintra.ref import lintra_ref, lintra_ref_folded
 
@@ -207,7 +207,7 @@ def _abstract_args(spec: dict[str, Any]) -> tuple:
 
 
 def _example_args(spec: dict[str, Any]) -> tuple:
-    return tuple(jnp.ones(s, d) for s, d in _shapes(spec))
+    return tuple(example_fill(s, d) for s, d in _shapes(spec))
 
 
 KERNEL = KernelDef(
@@ -219,6 +219,9 @@ KERNEL = KernelDef(
     abstract_args=_abstract_args,
     example_args=_example_args,
     default_point=DEFAULT_POINT,
+    oracle=lintra_ref,
+    # a single fused multiply-add per element: no accumulation at all
+    tolerance={"rtol": 1e-5, "atol": 1e-7},
 )
 
 

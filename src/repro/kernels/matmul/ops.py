@@ -15,7 +15,7 @@ import jax.numpy as jnp
 from repro.core.compilette import Compilette
 from repro.core.profiles import TPU_V5E, DeviceProfile
 from repro.core.tuning_space import Param, Point, TuningSpace
-from repro.kernels.catalog import KernelDef
+from repro.kernels.catalog import KernelDef, example_fill
 from repro.kernels.matmul.matmul import matmul_pallas
 from repro.kernels.matmul.ref import matmul_ref
 
@@ -201,7 +201,7 @@ def _abstract_args(spec: dict[str, Any]) -> tuple:
 
 
 def _example_args(spec: dict[str, Any]) -> tuple:
-    return tuple(jnp.ones(s, d) for s, d in _shapes(spec))
+    return tuple(example_fill(s, d) for s, d in _shapes(spec))
 
 
 KERNEL = KernelDef(
@@ -213,6 +213,9 @@ KERNEL = KernelDef(
     abstract_args=_abstract_args,
     example_args=_example_args,
     default_point=DEFAULT_POINT,
+    oracle=matmul_ref,
+    # tiled f32 accumulation vs one fused dot: order-of-summation only
+    tolerance={"rtol": 1e-3, "atol": 1e-5},
 )
 
 

@@ -12,7 +12,7 @@ import jax.numpy as jnp
 from repro.core.compilette import Compilette
 from repro.core.profiles import TPU_V5E, DeviceProfile
 from repro.core.tuning_space import Param, Point, TuningSpace
-from repro.kernels.catalog import KernelDef
+from repro.kernels.catalog import KernelDef, example_fill
 from repro.kernels.rmsnorm.ref import rmsnorm_ref
 from repro.kernels.rmsnorm.rmsnorm import rmsnorm_pallas
 
@@ -95,7 +95,8 @@ def _abstract_args(spec: dict[str, Any]) -> tuple:
 
 def _example_args(spec: dict[str, Any]) -> tuple:
     dt = spec.get("dtype", "float32")
-    return (jnp.ones((spec["N"], spec["d"]), dt), jnp.ones((spec["d"],), dt))
+    return (example_fill((spec["N"], spec["d"]), dt),
+            example_fill((spec["d"],), dt))
 
 
 KERNEL = KernelDef(
@@ -107,6 +108,8 @@ KERNEL = KernelDef(
     abstract_args=_abstract_args,
     example_args=_example_args,
     default_point=DEFAULT_POINT,
+    oracle=rmsnorm_ref,
+    tolerance={"rtol": 1e-3, "atol": 1e-5},
 )
 
 

@@ -66,6 +66,7 @@ from repro.core.compilette import (
 )
 from repro.core.decision import RegenerationPolicy, TuningAccounts
 from repro.core.explorer import SearchStrategy
+from repro.core.gate import GATE_MODES, VariantGate
 from repro.core.persistence import TunedRegistry, device_fingerprint
 from repro.runtime.lifecycle import (
     TunerLifecycle,
@@ -149,8 +150,26 @@ class TuningCoordinator:
         generation_cache: GenerationCache | None = None,
         prefetch: int = 1,
         compile_workers: int = 1,
+        gate_mode: str = "off",
+        canary_fraction: float = 0.25,
+        canary_calls: int = 8,
+        gate_rtol: float | None = None,
+        gate_atol: float | None = None,
     ) -> None:
+        if gate_mode not in GATE_MODES:
+            raise ValueError(
+                f"gate_mode must be one of {GATE_MODES}, got {gate_mode!r}")
         self.policy = policy or RegenerationPolicy()
+        # Trusted swaps: with gate_mode != "off" every registered tuner
+        # gets a VariantGate over its compilette's declared oracle (with
+        # these session-level tolerance overrides) and a quarantine
+        # callback writing condemned points through to the registry, so a
+        # bad point is never re-trusted across restarts.
+        self.gate_mode = gate_mode
+        self.canary_fraction = float(canary_fraction)
+        self.canary_calls = int(canary_calls)
+        self.gate_rtol = gate_rtol
+        self.gate_atol = gate_atol
         self.clock = clock or time.perf_counter
         if registry is not None:
             self.registry = registry
@@ -267,9 +286,32 @@ class TuningCoordinator:
                 # stale entry from an older space definition (renamed or
                 # added parameters): a cache miss, never a crash
                 warm_point = None
+            # persisted quarantine: condemned points (wrong output, tail
+            # regression, raising variant) must neither warm-start nor be
+            # re-proposed after restart — seed the explorer's quarantine
+            # set below and drop a condemned warm point outright
+            bad_points = [
+                p for p in self.registry.quarantined_points(
+                    name, spec, reg_device)
+                if compilette.space.contains(p)
+            ]
+            if warm_point is not None and any(
+                    compilette.space.key(warm_point)
+                    == compilette.space.key(p) for p in bad_points):
+                warm_point = None
             # every generation (sync or async) goes through the shared
             # compiled-variant cache, keyed under this process's device
             compilette.attach_cache(self.generation_cache, self.device)
+            gate = (VariantGate(compilette, rtol=self.gate_rtol,
+                                atol=self.gate_atol)
+                    if self.gate_mode != "off" else None)
+
+            def _quarantine_cb(point: dict[str, Any], reason: str,
+                               _name: str = name,
+                               _spec: dict[str, Any] = spec,
+                               _dev: str = reg_device) -> None:
+                self.registry.quarantine(_name, _spec, _dev, point, reason)
+
             tuner = OnlineAutotuner(
                 compilette,
                 evaluator,
@@ -284,7 +326,14 @@ class TuningCoordinator:
                 clock=self.clock,
                 budget_gate=self._shared_budget_gate,
                 generator=self.generator,
+                gate=gate,
+                gate_mode=self.gate_mode,
+                canary_fraction=self.canary_fraction,
+                canary_calls=self.canary_calls,
+                quarantine_cb=_quarantine_cb,
             )
+            for p in bad_points:
+                tuner.explorer.quarantine(p)
             managed = ManagedTuner(
                 name=name,
                 specialization=spec,
@@ -306,6 +355,8 @@ class TuningCoordinator:
         "tuning_spent_s", "gen_spent_s", "gen_stall_s", "eval_spent_s",
         "gained_s", "busy_s", "kernel_calls", "regenerations",
         "gen_requests", "swaps", "init_spent_s",
+        "gate_spent_s", "gate_checks", "gate_failures",
+        "canary_calls", "canary_promotions", "rollbacks", "quarantined",
     )
 
     @classmethod
@@ -670,6 +721,16 @@ class TuningCoordinator:
             "overhead_frac": (
                 agg.tuning_spent_s / elapsed if elapsed > 0 else 0.0
             ),
+            # trusted-swaps rollup: per-kernel entries + retired_accounts
+            # below reconcile exactly with these aggregates
+            "gate_mode": self.gate_mode,
+            "gate_spent_s": agg.gate_spent_s,
+            "gate_checks": agg.gate_checks,
+            "gate_failures": agg.gate_failures,
+            "canary_calls": agg.canary_calls,
+            "canary_promotions": agg.canary_promotions,
+            "rollbacks": agg.rollbacks,
+            "quarantined": agg.quarantined,
             "budget_s": self.policy.budget_s(agg, self.clock()),
             "budget_spent_s": self.policy.spent_s(agg),
             "lifecycle": {
@@ -686,7 +747,9 @@ class TuningCoordinator:
                 f: getattr(self._retired_accounts, f)
                 for f in ("tuning_spent_s", "gen_spent_s", "gen_stall_s",
                           "eval_spent_s", "gained_s", "regenerations",
-                          "swaps")
+                          "swaps", "gate_spent_s", "gate_checks",
+                          "gate_failures", "canary_calls",
+                          "canary_promotions", "rollbacks", "quarantined")
             },
             "generation_cache": self.generation_cache.stats(),
             "generation": (self.generator.stats()

@@ -105,6 +105,7 @@ class KernelTuningPlane:
         evaluator_factory: "Callable[[KernelCompilette], Any] | None" = None,
         eval_runs: int = 1,
         adopt_points: bool = True,
+        compilette_hook: "Callable[[KernelCompilette], None] | None" = None,
     ) -> None:
         self.coordinator = coordinator
         self.catalog = catalog or get_catalog()
@@ -115,6 +116,10 @@ class KernelTuningPlane:
         self.gen_cost_s = gen_cost_s
         self.evaluator_factory = evaluator_factory
         self.eval_runs = eval_runs
+        # Runs on every freshly built kernel compilette, before its first
+        # generation: the fault-injection replay harness installs scripted
+        # gate verdicts (``comp.gate_script``) and wrapped generators here.
+        self.compilette_hook = compilette_hook
         # Trace-time adoption: jitted step-programs read best_point() for
         # their block sizes. Turned OFF when a program-level tuner owns
         # those same parameters (serve/train "both" mode), so the two
@@ -156,6 +161,8 @@ class KernelTuningPlane:
                 plane.adopt_points = kwargs["adopt_points"]
             if kwargs.get("strategies"):
                 plane.strategies.update(kwargs["strategies"])
+            if kwargs.get("compilette_hook") is not None:
+                plane.compilette_hook = kwargs["compilette_hook"]
         return plane
 
     # ------------------------------------------------------------ evaluators
@@ -204,6 +211,8 @@ class KernelTuningPlane:
             name, bucketed,
             interpret=self.interpret, aot=self.aot, virtual=self.virtual,
             gen_cost_s=self.gen_cost_s)
+        if self.compilette_hook is not None:
+            self.compilette_hook(comp)
         if not comp.has_valid_points():
             if require:
                 raise ValueError(
