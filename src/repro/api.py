@@ -91,6 +91,40 @@ def _canon(spec: Mapping[str, Any]) -> str:
     return json.dumps(dict(spec), sort_keys=True, separators=(",", ":"))
 
 
+def _parse_workers(value: Any) -> "int | str":
+    """``--compile-workers`` / env value: a pool size M, or \"auto\"."""
+    s = str(value).strip()
+    if s.lower() == "auto":
+        return "auto"
+    return int(s)
+
+
+def _resolve_backend(spec: Any) -> Any:
+    """A :class:`~repro.core.persistence.RegistryBackend` from config.
+
+    ``None``/empty stays local-only; ``"shared:<path>"`` (or a bare
+    path) builds a :class:`~repro.core.persistence.SharedFileBackend`
+    over that file. Non-string values are assumed to already BE backend
+    objects (e.g. a ``FleetBus`` handed to :class:`TuningSession`) and
+    pass through.
+    """
+    if spec is None:
+        return None
+    if not isinstance(spec, str):
+        return spec
+    s = spec.strip()
+    if not s:
+        return None
+    from repro.core.persistence import SharedFileBackend
+
+    scheme, sep, rest = s.partition(":")
+    if sep and scheme == "shared" and rest:
+        return SharedFileBackend(rest)
+    if sep and scheme in ("local", "file") and rest:
+        return SharedFileBackend(rest)
+    return SharedFileBackend(s)   # bare path
+
+
 # ============================================================== TuningConfig
 @dataclasses.dataclass
 class TuningConfig:
@@ -117,7 +151,7 @@ class TuningConfig:
     pump_every: int = 8               # app calls between tuning slots
     async_generation: bool = True     # compile variants off the hot path
     prefetch: int = 1                 # speculative compiles per slot
-    compile_workers: int = 1          # compile-farm pool size (M)
+    compile_workers: "int | str" = 1  # compile-farm pool size (M) or "auto"
     compile_backend: str = "auto"     # auto | thread | process | manual
     kernel_tuning: str = "program"    # off | program | kernel | both
     cache_entries: int | None = 256   # generation-cache entry bound
@@ -127,6 +161,13 @@ class TuningConfig:
     canary_calls: int = 8             # clean canary calls before promotion
     gate_rtol: float | None = None    # oracle tolerance overrides
     gate_atol: float | None = None    # (None = per-kernel catalog values)
+    # fleet fabric: N replicas partition exploration and share a registry
+    # backend ("shared:<path>" or a bare path -> SharedFileBackend; pass
+    # backend OBJECTS — e.g. a FleetBus — to TuningSession directly)
+    replica_id: int = 0               # this replica's index in the fleet
+    replica_count: int = 1            # fleet size (1 = no partitioning)
+    registry_backend: str | None = None   # shared backend spec
+    sync_every_s: float | None = 1.0  # fleet sync cadence (None = every pump)
 
     def __post_init__(self) -> None:
         if self.kernel_tuning not in KERNEL_TUNING_MODES:
@@ -141,9 +182,22 @@ class TuningConfig:
             raise ValueError(
                 f"compile_backend must be one of {COMPILE_BACKENDS}, "
                 f"got {self.compile_backend!r}")
-        if self.compile_workers < 1:
+        if self.compile_workers != "auto" and (
+                not isinstance(self.compile_workers, int)
+                or self.compile_workers < 1):
             raise ValueError(
-                f"compile_workers must be >= 1, got {self.compile_workers}")
+                f"compile_workers must be >= 1 or 'auto', "
+                f"got {self.compile_workers!r}")
+        if self.replica_count < 1:
+            raise ValueError(
+                f"replica_count must be >= 1, got {self.replica_count}")
+        if not 0 <= self.replica_id < self.replica_count:
+            raise ValueError(
+                f"replica_id must be in [0, {self.replica_count}), "
+                f"got {self.replica_id}")
+        if self.sync_every_s is not None and self.sync_every_s < 0:
+            raise ValueError(
+                f"sync_every_s must be >= 0 or None, got {self.sync_every_s}")
         if self.gate_mode not in GATE_MODES:
             raise ValueError(
                 f"gate_mode must be one of {GATE_MODES}, "
@@ -191,15 +245,16 @@ class TuningConfig:
                     "async_generation")
     _FLOAT_FIELDS = ("max_overhead", "invest", "canary_fraction")
     _OPT_FLOAT_FIELDS = ("slo_s", "slo_quantile", "idle_evict_s",
-                         "gate_rtol", "gate_atol")
-    _INT_FIELDS = ("pump_every", "prefetch", "compile_workers",
-                   "canary_calls")
+                         "gate_rtol", "gate_atol", "sync_every_s")
+    _INT_FIELDS = ("pump_every", "prefetch", "canary_calls",
+                   "replica_id", "replica_count")
     _OPT_INT_FIELDS = ("cache_entries", "cache_bytes")
-    _OPT_STR_FIELDS = ("registry_path",)
+    _OPT_STR_FIELDS = ("registry_path", "registry_backend")
     # environment/CLI spellings that map onto differently named fields
     _FIELD_ALIASES = {"autotune": "enabled",
                       "kernel_strategies": "strategies",
-                      "gate": "gate_mode"}
+                      "gate": "gate_mode",
+                      "sync_every": "sync_every_s"}
 
     @classmethod
     def _parse_field(cls, field: str, raw: str) -> Any:
@@ -217,6 +272,8 @@ class TuningConfig:
             return None if none else int(s)
         if field in cls._OPT_STR_FIELDS:
             return None if none else s
+        if field == "compile_workers":
+            return _parse_workers(s)
         if field == "strategies":
             items = [i for i in s.replace(",", " ").split() if i]
             try:
@@ -318,10 +375,11 @@ class TuningConfig:
                             "cycle) instead of the background pipeline")
         g.add_argument("--prefetch", type=int, default=base.prefetch,
                        help="speculative compiles per tuning slot (0=off)")
-        g.add_argument("--compile-workers", type=int,
+        g.add_argument("--compile-workers", type=_parse_workers,
                        default=base.compile_workers,
                        help="compile-farm pool size: background variant "
-                            "compiles running concurrently")
+                            "compiles running concurrently, or 'auto' "
+                            "to grow under backlog and shrink when idle")
         g.add_argument("--compile-backend", default=base.compile_backend,
                        choices=list(COMPILE_BACKENDS),
                        help="compile-farm backend: auto picks threads "
@@ -345,6 +403,20 @@ class TuningConfig:
                        help="override the per-kernel oracle rtol")
         g.add_argument("--gate-atol", type=float, default=base.gate_atol,
                        help="override the per-kernel oracle atol")
+        g.add_argument("--replica-id", type=int, default=base.replica_id,
+                       help="fleet: this replica's index in [0, "
+                            "replica-count)")
+        g.add_argument("--replica-count", type=int,
+                       default=base.replica_count,
+                       help="fleet: replicas partitioning exploration "
+                            "over a shared registry backend")
+        g.add_argument("--registry-backend", default=base.registry_backend,
+                       help="fleet: shared registry backend, "
+                            "'shared:<path>' (lock-file protected JSON "
+                            "shared by every replica)")
+        g.add_argument("--sync-every", type=float, dest="sync_every_s",
+                       default=base.sync_every_s,
+                       help="fleet: seconds between registry syncs")
         return parser
 
     @classmethod
@@ -389,6 +461,10 @@ class TuningConfig:
             canary_calls=args.canary_calls,
             gate_rtol=args.gate_rtol,
             gate_atol=args.gate_atol,
+            replica_id=args.replica_id,
+            replica_count=args.replica_count,
+            registry_backend=args.registry_backend,
+            sync_every_s=args.sync_every_s,
         )
 
 
@@ -626,6 +702,7 @@ class TuningSession:
         aot: bool = True,
         close_on_scope_exit: bool = False,
         compilette_hook: Callable[[Any], None] | None = None,
+        registry_backend: Any | None = None,
     ) -> None:
         self.config = config if config is not None else TuningConfig()
         # kernel-plane construction kwargs (virtual backend for tests and
@@ -679,6 +756,15 @@ class TuningSession:
                 canary_calls=cfg.canary_calls,
                 gate_rtol=cfg.gate_rtol,
                 gate_atol=cfg.gate_atol,
+                replica_id=cfg.replica_id,
+                replica_count=cfg.replica_count,
+                # a backend OBJECT passed to the session (FleetBus, a
+                # custom RegistryBackend) wins over the config's string
+                # spec; both plug into the same coordinator knob
+                registry_backend=_resolve_backend(
+                    registry_backend if registry_backend is not None
+                    else cfg.registry_backend),
+                sync_every_s=cfg.sync_every_s,
             )
         self.coordinator._session = self
         self._plane: KernelTuningPlane | None = getattr(

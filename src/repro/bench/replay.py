@@ -721,6 +721,7 @@ def replay_session(clock: Any, *, config: Any | None = None,
                    gen_cost_s: float = GEN_COST_S,
                    device: str = REPLAY_DEVICE,
                    registry: Any | None = None,
+                   registry_backend: Any | None = None,
                    compilette_hook: Callable[[Any], None] | None = None,
                    ) -> "Any":
     """A ``TuningSession`` on the virtual cost-model kernel backend."""
@@ -729,6 +730,7 @@ def replay_session(clock: Any, *, config: Any | None = None,
     return TuningSession(
         config if config is not None else replay_tuning_defaults(),
         clock=clock, device=device, registry=registry,
+        registry_backend=registry_backend,
         virtual=(clock, profile), gen_cost_s=gen_cost_s,
         evaluator_factory=lambda comp: VirtualClockEvaluator(clock),
         compilette_hook=compilette_hook)

@@ -38,14 +38,20 @@ from repro.core.explorer import (
     TwoPhaseExplorer,
     available_strategies,
     make_strategy,
+    point_stripe,
     register_strategy,
 )
 from repro.core.gate import GATE_MODES, VariantGate
 from repro.core.persistence import (
+    FleetBus,
+    LocalBackend,
+    RegistryBackend,
+    SharedFileBackend,
     TunedRegistry,
     compiler_version,
     device_fallbacks,
     device_fingerprint,
+    merge_snapshots,
 )
 from repro.core.profiles import ALL_PROFILES, EQUIVALENT_PAIRS, TPU_V5E, DeviceProfile
 from repro.core.static_tuner import static_autotune
@@ -89,11 +95,17 @@ __all__ = [
     "GreedyNeighborhood",
     "available_strategies",
     "make_strategy",
+    "point_stripe",
     "register_strategy",
+    "FleetBus",
+    "LocalBackend",
+    "RegistryBackend",
+    "SharedFileBackend",
     "TunedRegistry",
     "compiler_version",
     "device_fallbacks",
     "device_fingerprint",
+    "merge_snapshots",
     "ALL_PROFILES",
     "EQUIVALENT_PAIRS",
     "TPU_V5E",

@@ -189,6 +189,8 @@ class OnlineAutotuner:
             self.accounts.init_spent_s += min(
                 m.eval_time_s, m.score_s * m.n_runs)
         self.reference_score_s = reference_score_s
+        # kept for external demotion (fleet quarantine of the incumbent)
+        self._reference_fn: Callable[..., Any] = reference_fn
         self._active: Callable[..., Any] = reference_fn
         self._active_life = KernelLife(point=None, score_s=reference_score_s)
         self._lives.append(self._active_life)
@@ -281,6 +283,38 @@ class OnlineAutotuner:
         self.explorer.quarantine(point)
         if self._quarantine_cb is not None:
             self._quarantine_cb(dict(point), reason)
+
+    def adopt_quarantine(self, point: Point, reason: str = "") -> bool:
+        """Adopt a condemnation published elsewhere (a peer replica).
+
+        Unlike :meth:`_quarantine` this is an *external* verdict: the
+        point is quarantined in the explorer, a matching in-flight canary
+        is aborted silently (no rollback is charged — the canary did
+        nothing wrong locally), and a matching ACTIVE incumbent is
+        demoted back to the reference function (a peer's oracle or canary
+        proved it wrong under traffic this replica has not seen yet).
+        The registry write-through is skipped: the caller merged the
+        quarantine from the registry in the first place. Returns True if
+        any local state changed.
+        """
+        key = self.explorer.space.key(point)
+        with self._lock:
+            changed = False
+            if not self.explorer.is_quarantined(point):
+                self.explorer.quarantine(point)
+                changed = True
+            canary = self._canary
+            if (canary is not None and canary.life.point is not None
+                    and self.explorer.space.key(canary.life.point) == key):
+                self._canary = None
+                changed = True
+            if (self._active_life.point is not None
+                    and self.explorer.space.key(self._active_life.point)
+                    == key):
+                self._active = self._reference_fn
+                self._active_life = self._lives[0]
+                changed = True
+            return changed
 
     # ------------------------------------------------------------ gains
     def _update_gains(self) -> None:
@@ -384,6 +418,13 @@ class OnlineAutotuner:
                     self.explorer.report(ticket.point, float("inf"))
                     self._quarantine(
                         ticket.point, f"generation failed: {ticket.error!r}")
+                    return False
+                if self.explorer.is_quarantined(ticket.point):
+                    # condemned while the compile was in flight (e.g. a
+                    # peer replica's verdict arrived via fleet sync): pay
+                    # for the wasted compile, never evaluate or serve it
+                    self.accounts.tuning_spent_s += ticket.gen_charge_s
+                    self.accounts.gen_spent_s += ticket.gen_charge_s
                     return False
                 return self._measure_and_swap(
                     ticket.point, ticket.kern,

@@ -98,15 +98,41 @@ class CompileFarm:
     the prefetched variant is never proposed.
     """
 
+    #: consecutive backlogged submits before an "auto" pool grows
+    AUTO_GROW_AFTER = 2
+    #: consecutive idle observations before an "auto" pool shrinks
+    AUTO_SHRINK_AFTER = 8
+
     def __init__(self, mode: str = "thread", *,
-                 workers: int = 1,
+                 workers: "int | str" = 1,
                  per_kernel_cap: int | None = None,
-                 worker_idle_timeout_s: float = 30.0) -> None:
+                 worker_idle_timeout_s: float = 30.0,
+                 max_workers: int | None = None) -> None:
         if mode not in _MODES:
             raise ValueError(
                 f"CompileFarm mode must be one of {_MODES}, got {mode!r}")
         self.mode = mode
-        self.workers = max(int(workers), 1)
+        # Adaptive sizing: workers="auto" starts at 1 and grows under
+        # sustained queue backlog (more queued+running jobs than workers
+        # on AUTO_GROW_AFTER consecutive submits), shrinks back when the
+        # farm is observed idle. The signals are pure queue-state
+        # counters sampled at submits and manual pump ticks — no clocks,
+        # no thread timing — so the manual/virtual backend resizes (and
+        # therefore batches) byte-identically across same-seed runs.
+        self.auto_sized = workers == "auto"
+        if self.auto_sized:
+            import os
+            self.workers = 1
+            self.max_workers = (max(int(max_workers), 1)
+                                if max_workers is not None
+                                else min(8, os.cpu_count() or 1))
+        else:
+            self.workers = max(int(workers), 1)
+            self.max_workers = self.workers
+        self._backlog_pressure = 0
+        self._idle_pressure = 0
+        self.grown = 0
+        self.shrunk = 0
         self.per_kernel_cap = (None if per_kernel_cap is None
                                else max(int(per_kernel_cap), 1))
         self.worker_idle_timeout_s = worker_idle_timeout_s
@@ -176,6 +202,9 @@ class CompileFarm:
                             # served) or after the deregistration (and
                             # spawns a replacement)
                             if not self._heap:
+                                # an idle-retiring worker is the thread
+                                # backend's idleness signal
+                                self._note_idle_locked()
                                 return
                     ticket = heapq.heappop(self._heap)[-1]
                     self._busy += 1
@@ -374,6 +403,37 @@ class CompileFarm:
         else:
             self._kernel_inflight.pop(name, None)
 
+    # ------------------------------------------------------------- sizing
+    def _note_backlog_locked(self) -> None:
+        """Auto sizing, sampled at submit (caller holds the mutex)."""
+        if not self.auto_sized:
+            return
+        queued = len(self._heap) + self._busy
+        if queued > self.workers:
+            self._idle_pressure = 0
+            self._backlog_pressure += 1
+            if (self._backlog_pressure >= self.AUTO_GROW_AFTER
+                    and self.workers < self.max_workers):
+                self.workers += 1
+                self.grown += 1
+                self._backlog_pressure = 0
+        else:
+            self._backlog_pressure = 0
+
+    def _note_idle_locked(self) -> None:
+        """Auto sizing, sampled when the farm is observed with no work."""
+        if not self.auto_sized:
+            return
+        if self._heap or self._busy:
+            self._idle_pressure = 0
+            return
+        self._backlog_pressure = 0
+        self._idle_pressure += 1
+        if self._idle_pressure >= self.AUTO_SHRINK_AFTER and self.workers > 1:
+            self.workers -= 1
+            self.shrunk += 1
+            self._idle_pressure = 0
+
     def run_pending(self, max_jobs: int | None = None) -> int:
         """Manual mode: complete up to ``max_jobs`` queued jobs inline —
         one *batch* of ``workers`` jobs by default (the max-overlap model
@@ -382,6 +442,8 @@ class CompileFarm:
         mode (the workers drain the queue themselves)."""
         if self.mode != "manual":
             return 0
+        with self._mu:
+            self._note_idle_locked()
         batch = self.workers if max_jobs is None else max_jobs
         n = 0
         while n < batch:
@@ -499,6 +561,7 @@ class CompileFarm:
                 self._heap,
                 (-ticket.priority, 1 if speculative else 0,
                  ticket.seq, ticket))
+            self._note_backlog_locked()
             self._spawn_locked()
             self._cv.notify()
         return ticket
@@ -540,6 +603,10 @@ class CompileFarm:
             return {
                 "mode": self.mode,
                 "workers": self.workers,
+                "auto_sized": self.auto_sized,
+                "max_workers": self.max_workers,
+                "grown": self.grown,
+                "shrunk": self.shrunk,
                 "per_kernel_cap": self.per_kernel_cap,
                 "submitted": self.submitted,
                 "completed": self.completed,

@@ -49,11 +49,31 @@ Built-in strategies:
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import itertools
+import json
 import random as _random
 from typing import Any, Callable, Iterator, Sequence
 
 from repro.core.tuning_space import Point, TuningSpace
+
+
+def point_stripe(point: Point, replica_count: int) -> int:
+    """Deterministic stripe owner of a point in an N-replica fleet.
+
+    Hash-stripes the point space: sha256 of the point's canonical JSON
+    modulo ``replica_count``. Stable across processes and runs (unlike
+    Python's randomized ``hash()``), independent of the space object, so
+    every replica computes the same owner for the same point — the
+    stripes are disjoint and jointly exhaustive by construction.
+    """
+    n = int(replica_count)
+    if n < 1:
+        raise ValueError(f"replica_count must be >= 1, got {replica_count}")
+    canon = json.dumps(dict(point), sort_keys=True,
+                       separators=(",", ":"), default=str)
+    digest = hashlib.sha256(canon.encode("utf-8")).digest()
+    return int.from_bytes(digest[:8], "big") % n
 
 
 def _leftover_rank(space: TuningSpace, point: Point) -> float:
@@ -132,6 +152,14 @@ class SearchStrategy:
             dict(p) for p in seed_points
             if space.contains(p) and space.is_valid(p)
         ]
+        # Fleet partitioning (see ``partition``): None = whole space.
+        self._replica: tuple[int, int] | None = None
+        # Points exempt from the stripe filter: warm-start seeds (the
+        # fleet best must stay re-validatable everywhere) and injected
+        # peer candidates.
+        self._stripe_exempt: set[tuple] = set()
+        # Peer bests already injected (idempotence across syncs).
+        self._injected: set[tuple] = set()
 
     # ---------------------------------------------------- subclass hooks
     def _propose(self) -> Point | None:
@@ -142,14 +170,107 @@ class SearchStrategy:
         """React to a reported measurement (e.g. recenter a neighborhood)."""
 
     # ------------------------------------------------------------------ api
+    def _owns(self, point: Point) -> bool:
+        """Does this replica's stripe (or exemption list) cover ``point``?"""
+        if self._replica is None:
+            return True
+        if self.space.key(point) in self._stripe_exempt:
+            return True
+        replica_id, replica_count = self._replica
+        return point_stripe(point, replica_count) == replica_id
+
+    def partition(self, replica_id: int, replica_count: int) -> None:
+        """Restrict proposals to this replica's hash stripe of the space.
+
+        The fleet idiom: N replicas sharing a registry backend each call
+        ``partition(i, N)`` so exploration is paid once per fleet — every
+        point is owned (proposed, compiled, measured) by exactly one
+        replica, per :func:`point_stripe`. Foreign points are marked seen
+        as they stream past, so ``peek`` never leaks them and restart
+        scans terminate. Warm-start seeds and :meth:`inject_candidate`
+        points are exempt: a fleet best must stay locally re-validatable
+        (through the gate) on every replica.
+        """
+        replica_id, replica_count = int(replica_id), int(replica_count)
+        if replica_count < 1 or not 0 <= replica_id < replica_count:
+            raise ValueError(
+                f"invalid partition ({replica_id}, {replica_count})")
+        if replica_count == 1:
+            self._replica = None
+            return
+        self._replica = (replica_id, replica_count)
+        for p in self._seeds:
+            self._stripe_exempt.add(self.space.key(p))
+        # already-buffered foreign points must not be served
+        if self._peeked:
+            self._peeked = [p for p in self._peeked if self._owns(p)]
+
+    def mark_seen(self, point: Point) -> bool:
+        """Record a peer replica's evaluation: never propose this point.
+
+        Purges it from the peek buffer even when already drawn into the
+        seen-set (a buffered prefetch IS seen), so a pending prefetch
+        cannot re-compile work a peer already paid for. An *injected*
+        candidate is exempt: the fleet best is published alongside its
+        own evaluation, and the peer's measurement must not cancel this
+        replica's re-validation of it (a repeat sync would otherwise
+        purge the pending candidate while :meth:`inject_candidate`'s
+        dedup refuses to re-queue it — losing the adoption entirely).
+        Returns True if the call changed anything (newly marked or
+        purged).
+        """
+        key = self.space.key(point)
+        if key in self._injected:
+            return False
+        purged = False
+        if self._peeked:
+            kept = [p for p in self._peeked if self.space.key(p) != key]
+            purged = len(kept) != len(self._peeked)
+            self._peeked = kept
+        if key in self._seen:
+            return purged
+        self._seen.add(key)
+        return True
+
+    def inject_candidate(self, point: Point) -> bool:
+        """Queue an externally supplied candidate (a peer's published best).
+
+        The point jumps the proposal queue and bypasses the seen-set
+        (peer evaluations mark it seen, yet it must stay proposable
+        here) — but it still flows through the normal generate/evaluate/
+        gate/canary path, entering as CANDIDATE, never blind INCUMBENT.
+        Idempotent per point; quarantined, locally measured or already
+        queued points are refused. Returns True when queued.
+        """
+        if not (self.space.contains(point) and self.space.is_valid(point)):
+            return False
+        key = self.space.key(point)
+        if key in self._quarantined or key in self._injected:
+            return False
+        if any(self.space.key(p) == key for p, _ in self.history):
+            return False   # already measured locally
+        if any(self.space.key(p) == key for p in self._peeked):
+            return False   # already pending proposal
+        self._injected.add(key)
+        self._stripe_exempt.add(key)
+        self._seen.add(key)
+        self._peeked.insert(0, dict(point))
+        self.state.finished = False   # an exhausted search has new work
+        return True
+
     def _draw(self) -> Point | None:
-        """Pull one deduplicated, valid candidate from ``_propose``."""
+        """Pull one deduplicated, valid, stripe-owned candidate."""
         while True:
             point = self._propose()
             if point is None:
                 return None
             key = self.space.key(point)
             if key in self._seen:
+                continue
+            if not self._owns(point):
+                # another replica's point: swallow it (counting it seen
+                # keeps restart scans terminating) and ask again
+                self._seen.add(key)
                 continue
             self._seen.add(key)
             return point

@@ -105,6 +105,9 @@ class ManagedTuner:
     # compilette (vs a whole step-program); consumers (CLI reports) can
     # split stats() entries without hard-coding step-program names
     plane_managed: bool = False
+    # fleet sync cursor: how much of the explorer history has already
+    # been published to the registry's evaluation ledger
+    evals_flushed: int = 0
 
     def __call__(self, *args: Any) -> Any:
         t0 = self.last_used_s = self.clock()
@@ -149,12 +152,16 @@ class TuningCoordinator:
         async_generation: "bool | str" = False,
         generation_cache: GenerationCache | None = None,
         prefetch: int = 1,
-        compile_workers: int = 1,
+        compile_workers: "int | str" = 1,
         gate_mode: str = "off",
         canary_fraction: float = 0.25,
         canary_calls: int = 8,
         gate_rtol: float | None = None,
         gate_atol: float | None = None,
+        replica_id: int = 0,
+        replica_count: int = 1,
+        registry_backend: Any | None = None,
+        sync_every_s: float | None = 1.0,
     ) -> None:
         if gate_mode not in GATE_MODES:
             raise ValueError(
@@ -225,10 +232,28 @@ class TuningCoordinator:
                     else ("manual" if hasattr(self.clock, "advance")
                           else "thread"))
             self.generator: CompileFarm | None = CompileFarm(
-                mode=mode, workers=max(int(compile_workers), 1),
+                mode=mode, workers=compile_workers,
                 per_kernel_cap=self.prefetch + 1)
         else:
             self.generator = None
+        # Fleet fabric: N replicas share one RegistryBackend. Exploration
+        # is hash-striped across them (every registered strategy gets
+        # partition(replica_id, replica_count)), sync_fleet() publishes
+        # local bests/evaluations/quarantines and adopts the fleet's —
+        # peer bests enter as CANDIDATE through the normal gate/canary
+        # path, peer quarantine is adopted unconditionally, peer
+        # evaluations count as seen so no point is compiled twice per
+        # fleet. sync_every_s=None syncs on every pump.
+        self.replica_id = int(replica_id)
+        self.replica_count = max(int(replica_count), 1)
+        if not 0 <= self.replica_id < self.replica_count:
+            raise ValueError(
+                f"replica_id must be in [0, {self.replica_count}), "
+                f"got {replica_id}")
+        self.registry_backend = registry_backend
+        self.sync_every_s = sync_every_s
+        self.fleet_syncs = 0
+        self._last_sync_s: float | None = None
         self._managed: list[ManagedTuner] = []
         self._by_key: dict[tuple[str, str], ManagedTuner] = {}
         # Accounting tombstone for retired tuners: the shared budget must
@@ -245,6 +270,12 @@ class TuningCoordinator:
         self._thread: threading.Thread | None = None
         self._stop = threading.Event()
         self._app_calls = 0
+        if self.registry_backend is not None:
+            # adopt the fleet's published state up front so the very
+            # first register() warm-starts from peer bests and never
+            # proposes a peer-condemned or peer-evaluated point
+            self.sync_fleet()
+            self._last_sync_s = self.clock()
 
     # ------------------------------------------------------------ register
     def register(
@@ -334,6 +365,26 @@ class TuningCoordinator:
             )
             for p in bad_points:
                 tuner.explorer.quarantine(p)
+            if self.replica_count > 1:
+                # fleet: this replica only explores its hash stripe of
+                # the space (the warm-start seed stays exempt — the
+                # fleet best must re-validate locally through the gate)
+                tuner.explorer.partition(self.replica_id, self.replica_count)
+            if self.registry_backend is not None:
+                # evaluations any replica already published count as
+                # seen: never compiled twice per fleet, across restarts
+                # too. The warm seed is excluded — marking it seen would
+                # swallow its re-validation proposal.
+                warm_key = (compilette.space.key(warm_point)
+                            if warm_point is not None else None)
+                for p in self.registry.evaluated_points(
+                        name, spec, reg_device):
+                    if not compilette.space.contains(p):
+                        continue
+                    if (warm_key is not None
+                            and compilette.space.key(p) == warm_key):
+                        continue
+                    tuner.explorer.mark_seen(p)
             managed = ManagedTuner(
                 name=name,
                 specialization=spec,
@@ -472,6 +523,7 @@ class TuningCoordinator:
         if self.generator is not None:
             self.generator.run_pending()
             batch = self.generator.workers
+        self._maybe_sync()
         self.sweep()
         with self._lock:
             candidates = self._candidates()
@@ -597,6 +649,82 @@ class TuningCoordinator:
         m.tuner._update_gains()
         self._accumulate(self._retired_accounts, m.tuner.accounts)
 
+    # ---------------------------------------------------------------- fleet
+    def _flush_evals(self, m: ManagedTuner) -> None:
+        """Publish new local measurements to the registry's fleet ledger."""
+        history = m.tuner.explorer.history
+        for point, score_s in history[m.evals_flushed:]:
+            if score_s == float("inf"):
+                continue   # holes/failures travel via the quarantine table
+            self.registry.record_evaluation(
+                m.name, m.specialization,
+                m.registry_device or self.device, point, score_s)
+        m.evals_flushed = len(history)
+
+    def _adopt_fleet_state(self, m: ManagedTuner) -> None:
+        """Fold the merged registry back into one live tuner.
+
+        Quarantine first (a peer's verdict beats everything: abort a
+        matching canary, demote a matching incumbent), then peer
+        evaluations (mark seen — never re-compiled here), then the fleet
+        best — injected as a CANDIDATE so it still passes this replica's
+        gate/canary before ever serving traffic.
+        """
+        t = m.tuner
+        space = t.compilette.space
+        dev = m.registry_device or self.device
+        for p in self.registry.quarantined_points(m.name, m.specialization,
+                                                  dev):
+            if space.contains(p):
+                t.adopt_quarantine(p, "fleet quarantine")
+        for p in self.registry.evaluated_points(m.name, m.specialization,
+                                                dev):
+            if space.contains(p):
+                t.explorer.mark_seen(p)
+        entry = self.registry.best_entry(m.name, m.specialization, dev)
+        if entry is not None:
+            point, score_s = entry
+            if (score_s < t.explorer.best_score
+                    and t.explorer.inject_candidate(point)
+                    and m.state is TunerState.CONVERGED):
+                # new fleet work for an exhausted tuner: wake it back up
+                m.state = TunerState.ACTIVE
+
+    def sync_fleet(self) -> bool:
+        """One fleet round-trip: publish local state, adopt the merge.
+
+        Local bests and measurement history go into the registry, the
+        backend merges that snapshot with every peer's (commutative
+        lower-score-wins / quarantine-union join), and the merged state
+        is folded back into the registry and every live tuner. Returns
+        True when a sync ran.
+        """
+        if self.registry_backend is None:
+            return False
+        with self._lock:
+            for m in self._managed:
+                self._flush_best(m)
+                self._flush_evals(m)
+        merged = self.registry_backend.sync(self.registry.snapshot())
+        self.registry.merge_snapshot(merged)
+        self.fleet_syncs += 1
+        with self._lock:
+            for m in self._managed:
+                self._adopt_fleet_state(m)
+        return True
+
+    def _maybe_sync(self) -> bool:
+        """Sync at the configured cadence (None = every pump)."""
+        if self.registry_backend is None:
+            return False
+        now = self.clock()
+        if (self.sync_every_s is not None
+                and self._last_sync_s is not None
+                and now - self._last_sync_s < self.sync_every_s):
+            return False
+        self._last_sync_s = now
+        return self.sync_fleet()
+
     def sweep(self) -> list[ManagedTuner]:
         """One lifecycle pass: converge exhausted tuners, evict idle ones.
 
@@ -695,6 +823,9 @@ class TuningCoordinator:
         self.stop_thread()
         if self.generator is not None:
             self.generator.shutdown()
+        # final fleet publish: bests/quarantines found since the last
+        # cadenced sync must not die with this replica
+        self.sync_fleet()
         self.save_registry()
 
     # ------------------------------------------------------------- reports
@@ -755,6 +886,13 @@ class TuningCoordinator:
             "generation": (self.generator.stats()
                            if self.generator is not None
                            else {"mode": "sync"}),
+            "fleet": {
+                "replica_id": self.replica_id,
+                "replica_count": self.replica_count,
+                "backend": (type(self.registry_backend).__name__
+                            if self.registry_backend is not None else None),
+                "syncs": self.fleet_syncs,
+            },
             "kernels": self._kernel_stats(),
         }
 

@@ -344,3 +344,99 @@ def test_process_backend_offloads_to_child_process():
     # declared virtual cost + the child's measured seconds, billed once
     assert t.gen_charge_s == pytest.approx(GEN_COST + 0.125)
     farm.shutdown()
+
+
+# --------------------------------------------------------- adaptive sizing
+def test_auto_farm_grows_under_sustained_backlog():
+    clock = VirtualClock()
+    farm = CompileFarm("manual", workers="auto", max_workers=4)
+    assert farm.auto_sized and farm.workers == 1
+    comp = tracked_compilette(clock)
+    # every submit sees more queued work than workers: backlog pressure
+    for i, u in enumerate((1, 2, 4, 8)):
+        farm.submit(comp, {"unroll": u}, {})
+    assert farm.workers > 1, "sustained backlog must grow the pool"
+    assert farm.stats()["grown"] == farm.workers - 1
+    assert farm.workers <= farm.max_workers
+    farm.drain()
+
+
+def test_auto_farm_never_exceeds_max_workers():
+    clock = VirtualClock()
+    farm = CompileFarm("manual", workers="auto", max_workers=2)
+    # distinct compilettes so every submit is a fresh (uncached) job
+    for wave in range(5):
+        comp = tracked_compilette(clock, f"k{wave}", gen_cost_s=0.001)
+        for u in (1, 2, 4, 8):
+            farm.submit(comp, {"unroll": u}, {})
+        farm.drain()
+        assert farm.workers <= 2
+    assert farm.stats()["max_workers"] == 2
+
+
+def test_auto_farm_shrinks_when_observed_idle():
+    clock = VirtualClock()
+    farm = CompileFarm("manual", workers="auto", max_workers=4)
+    comp = tracked_compilette(clock)
+    for u in (1, 2, 4, 8):
+        farm.submit(comp, {"unroll": u}, {})
+    farm.drain()
+    grown_to = farm.workers
+    assert grown_to > 1
+    # idle pumps: the pool cools back down one worker at a time
+    for _ in range(farm.AUTO_SHRINK_AFTER * (grown_to - 1)):
+        farm.run_pending()
+    assert farm.workers == 1
+    assert farm.stats()["shrunk"] == grown_to - 1
+
+
+def test_auto_farm_manual_mode_is_deterministic():
+    """Two same-seed runs through an auto-sized manual farm complete the
+    same batches in the same order: resize decisions are queue-state
+    functions, never wall-clock ones."""
+
+    def one_run():
+        clock = VirtualClock()
+        order = []
+        farm = CompileFarm("manual", workers="auto", max_workers=4)
+        comps = [tracked_compilette(clock, n, order)
+                 for n in ("a", "b", "c")]
+        log = []
+        for wave in range(4):
+            for j, comp in enumerate(comps):
+                farm.submit(comp, {"unroll": (1, 2, 4, 8)[wave]}, {},
+                            priority=float(j))
+            done = farm.run_pending()
+            log.append((done, farm.workers))
+        farm.drain()
+        s = farm.stats()
+        return order, log, (s["grown"], s["shrunk"], s["workers"])
+
+    assert one_run() == one_run()
+
+
+def test_fixed_farm_ignores_adaptive_signals():
+    clock = VirtualClock()
+    farm = CompileFarm("manual", workers=2)
+    assert not farm.auto_sized
+    comp = tracked_compilette(clock)
+    for u in (1, 2, 4, 8):
+        farm.submit(comp, {"unroll": u}, {})
+    for _ in range(farm.AUTO_SHRINK_AFTER * 2):
+        farm.run_pending()
+    s = farm.stats()
+    assert (farm.workers, s["grown"], s["shrunk"]) == (2, 0, 0)
+    assert s["max_workers"] == 2
+
+
+def test_auto_workers_validated_through_config():
+    from repro.api import TuningConfig
+
+    cfg = TuningConfig(compile_workers="auto")
+    assert cfg.compile_workers == "auto"
+    with pytest.raises(ValueError):
+        TuningConfig(compile_workers="fast")
+    coord = TuningCoordinator(device="test:v", clock=VirtualClock(),
+                              async_generation=True, compile_workers="auto")
+    assert coord.generator.auto_sized
+    assert coord.generator.stats()["auto_sized"]

@@ -1,0 +1,533 @@
+"""Fleet fabric: registry backends, snapshot merge, partitioned replicas.
+
+Everything deterministic on the VirtualClock + in-memory FleetBus; the
+filesystem paths go through tmp_path with a SharedFileBackend per
+"process". The invariants under test are the fleet contract:
+
+  * ``merge_snapshots`` is a commutative, idempotent join (lower score
+    wins, quarantine and evaluation ledgers union, condemned bests drop);
+  * a point condemned by replica A is never proposed, warm-started or
+    canaried by replica B after one sync — including after a restart
+    from the merged registry;
+  * peers' published evaluations count as seen: no point is compiled
+    twice per fleet;
+  * a peer's published best enters as a CANDIDATE through the gate, not
+    as a blind incumbent.
+"""
+
+import argparse
+import json
+import os
+import threading
+import time
+
+import pytest
+
+from repro.api import TuningConfig, TuningSession, _resolve_backend
+from repro.core import (
+    Compilette, FleetBus, LocalBackend, OnlineAutotuner, Param,
+    RegenerationPolicy, SharedFileBackend, TunedRegistry, VariantGate,
+    VirtualClock, VirtualClockEvaluator, merge_snapshots, product_space,
+    virtual_kernel,
+)
+from repro.runtime.coordinator import TuningCoordinator
+
+DEV = "test:v"
+
+
+def snap(*, best=None, quarantine=None, evaluations=None, generation=0):
+    """Build a registry snapshot literal for one key ``k``."""
+    reg = TunedRegistry()
+    if best is not None:
+        point, score = best
+        reg.put("k", {}, DEV, point, score)
+    if quarantine:
+        for point, reason in quarantine:
+            reg.quarantine("k", {}, DEV, point, reason)
+    if evaluations:
+        for point, score in evaluations:
+            reg.record_evaluation("k", {}, DEV, point, score)
+    reg._generation = generation
+    return reg.snapshot()
+
+
+def make_comp(clock, name="k", cost=lambda p: 0.010 / p["unroll"]):
+    sp = product_space([Param("unroll", (1, 2, 4, 8), phase=1,
+                              switch_rank=0)])
+
+    def gen(point, **spec):
+        return virtual_kernel(clock, cost(point), tag=dict(point))
+
+    return Compilette(name, sp, gen)
+
+
+def make_coordinator(clock, registry, backend, rid, count, **kw):
+    kw.setdefault("policy", RegenerationPolicy(
+        max_overhead_frac=1.0, invest_frac=1.0))
+    return TuningCoordinator(
+        device=DEV, clock=clock, registry=registry,
+        replica_id=rid, replica_count=count,
+        registry_backend=backend, sync_every_s=None, **kw)
+
+
+# -------------------------------------------------------- merge_snapshots
+def test_merge_lower_score_wins_and_is_commutative():
+    a = snap(best=({"unroll": 2}, 0.005))
+    b = snap(best=({"unroll": 8}, 0.00125))
+    ab, ba = merge_snapshots(a, b), merge_snapshots(b, a)
+    assert ab == ba
+    (key,) = [k for k in ab if not k.startswith("__")]
+    assert ab[key]["point"] == {"unroll": 8}
+    assert ab[key]["score_s"] == 0.00125
+    # idempotent: merging the merge changes nothing
+    assert merge_snapshots(ab, a) == ab
+
+
+def test_merge_quarantine_union_drops_condemned_best():
+    a = snap(best=({"unroll": 8}, 0.00125))
+    b = snap(quarantine=[({"unroll": 8}, "wrong output")])
+    for merged in (merge_snapshots(a, b), merge_snapshots(b, a)):
+        assert all(k.startswith("__") for k in merged), (
+            "a best condemned by any replica must not survive the merge")
+        quar = merged["__registry_meta__"]["quarantine"]
+        assert any("wrong output" in r
+                   for v in quar.values() for r in v.values())
+
+
+def test_merge_evaluations_union_keeps_min_score():
+    a = snap(evaluations=[({"unroll": 2}, 0.006)])
+    b = snap(evaluations=[({"unroll": 2}, 0.005), ({"unroll": 4}, 0.0025)])
+    ab, ba = merge_snapshots(a, b), merge_snapshots(b, a)
+    assert ab == ba
+    evals = next(iter(ab["__registry_meta__"]["evaluations"].values()))
+    assert sorted(evals.values()) == [0.0025, 0.005]
+
+
+def test_merge_generation_is_max():
+    a = snap(generation=3)
+    b = snap(generation=7)
+    assert merge_snapshots(a, b)["__registry_meta__"]["generation"] == 7
+
+
+def test_registry_merge_snapshot_round_trips_through_save_load(tmp_path):
+    reg = TunedRegistry()
+    reg.merge_snapshot(snap(
+        best=({"unroll": 4}, 0.0025),
+        quarantine=[({"unroll": 8}, "tail")],
+        evaluations=[({"unroll": 2}, 0.005)]))
+    path = str(tmp_path / "tuned.json")
+    reg.save(path)
+    back = TunedRegistry.load(path)
+    assert back.get("k", {}, DEV) == {"unroll": 4}
+    assert back.is_quarantined("k", {}, DEV, {"unroll": 8})
+    assert back.evaluated_points("k", {}, DEV) == [{"unroll": 2}]
+
+
+# ---------------------------------------------------------------- backends
+def test_local_backend_atomic_write_and_corrupt_read(tmp_path):
+    path = str(tmp_path / "r.json")
+    be = LocalBackend(path)
+    assert be.read() is None           # missing -> cold start
+    be.write({"x": {"point": {}, "score_s": 1.0}})
+    assert be.read() == {"x": {"point": {}, "score_s": 1.0}}
+    assert [f for f in os.listdir(tmp_path)] == ["r.json"], (
+        "write must not leak temp files")
+    with open(path, "w") as f:
+        f.write("{ torn")
+    assert be.read() is None           # corrupt -> cold start, no raise
+
+
+def test_shared_file_backend_merges_across_instances(tmp_path):
+    path = str(tmp_path / "fleet.json")
+    a, b = SharedFileBackend(path), SharedFileBackend(path)
+    a.sync(snap(best=({"unroll": 2}, 0.005)))
+    merged = b.sync(snap(best=({"unroll": 8}, 0.00125),
+                         quarantine=[({"unroll": 1}, "bad")]))
+    (key,) = [k for k in merged if not k.startswith("__")]
+    assert merged[key]["score_s"] == 0.00125
+    # and A observes B's quarantine on its next sync
+    merged_a = a.sync(snap())
+    assert merged_a["__registry_meta__"]["quarantine"]
+    assert not os.path.exists(path + ".lock"), "lock must be released"
+
+
+def test_shared_file_backend_stale_lock_takeover(tmp_path):
+    path = str(tmp_path / "fleet.json")
+    be = SharedFileBackend(path, stale_lock_s=5.0)
+    with open(be.lock_path, "w") as f:
+        f.write("99999")   # a holder that died mid-sync
+    old = time.time() - 60.0
+    os.utime(be.lock_path, (old, old))
+    merged = be.sync(snap(best=({"unroll": 2}, 0.005)))
+    assert be.stale_takeovers == 1
+    assert any(not k.startswith("__") for k in merged)
+    assert not os.path.exists(be.lock_path)
+
+
+def test_shared_file_backend_times_out_on_live_lock(tmp_path):
+    path = str(tmp_path / "fleet.json")
+    be = SharedFileBackend(path, lock_timeout_s=0.05, stale_lock_s=60.0,
+                           poll_s=0.001)
+    with open(be.lock_path, "w") as f:
+        f.write("1")       # fresh lock, legitimately held
+    with pytest.raises(TimeoutError):
+        be.sync(snap())
+    os.unlink(be.lock_path)
+    # after release the same backend syncs fine
+    assert be.sync(snap()) is not None
+
+
+def test_shared_file_backend_concurrent_syncs_lose_nothing(tmp_path):
+    path = str(tmp_path / "fleet.json")
+    errors = []
+
+    def publish(rid):
+        be = SharedFileBackend(path, lock_timeout_s=30.0)
+        try:
+            for j in range(5):
+                be.sync(snap(evaluations=[({"unroll": rid}, 0.001 * (j + 1))]))
+        except Exception as e:          # pragma: no cover - failure path
+            errors.append(e)
+
+    threads = [threading.Thread(target=publish, args=(rid,))
+               for rid in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+    final = SharedFileBackend(path).sync(snap())
+    evals = next(iter(final["__registry_meta__"]["evaluations"].values()))
+    # every replica's ledger survived, at the min score each
+    assert len(evals) == 4 and set(evals.values()) == {0.001}
+
+
+def test_fleet_bus_merges_and_isolates_state():
+    bus = FleetBus()
+    bus.sync(snap(best=({"unroll": 2}, 0.005)))
+    merged = bus.sync(snap(best=({"unroll": 8}, 0.00125)))
+    (key,) = [k for k in merged if not k.startswith("__")]
+    assert merged[key]["point"] == {"unroll": 8}
+    merged[key]["point"]["unroll"] = 999   # mutating the copy is harmless
+    assert bus.peek()[key]["point"] == {"unroll": 8}
+    assert bus.syncs == 2
+
+
+def test_resolve_backend_specs(tmp_path):
+    assert _resolve_backend(None) is None
+    assert _resolve_backend("") is None
+    bus = FleetBus()
+    assert _resolve_backend(bus) is bus    # objects pass through
+    be = _resolve_backend(f"shared:{tmp_path}/r.json")
+    assert isinstance(be, SharedFileBackend)
+    assert be.path == f"{tmp_path}/r.json"
+    bare = _resolve_backend(f"{tmp_path}/r2.json")
+    assert isinstance(bare, SharedFileBackend)
+
+
+# ----------------------------------------------------- fleet coordination
+def test_fleet_quarantine_reaches_peer_after_one_sync():
+    """Replica A condemns its gate-failing point; after one sync replica
+    B must treat it as condemned: never proposed, never served."""
+    bus = FleetBus()
+    bad = {"unroll": 8}
+    fleets = []
+    for rid in range(2):
+        clock = VirtualClock()
+        coord = make_coordinator(clock, TunedRegistry(), bus, rid, 2,
+                                 gate_mode="check")
+        comp = make_comp(clock)
+        comp.gate_script = lambda point: dict(point) != bad
+        m = coord.register("k", comp, VirtualClockEvaluator(clock),
+                           reference_fn=virtual_kernel(clock, 0.010))
+        fleets.append((coord, m, clock))
+
+    for i in range(300):
+        for coord, m, clock in fleets:
+            m(i)
+            clock.advance(0.010)
+            coord.observe_busy(0.010)
+            coord.pump()
+
+    for rid, (coord, m, clock) in enumerate(fleets):
+        assert m.tuner.explorer.is_quarantined(bad), rid
+        assert m.tuner.stats()["active_point"] != bad, rid
+        assert all(life.point != bad or life.calls == 0
+                   for life in m.tuner._lives), rid
+    # exactly ONE replica paid the oracle check for the bad point
+    failures = [m.tuner.stats()["gate_failures"] for _, m, _ in fleets]
+    assert sum(failures) == 1, failures
+
+
+def test_fleet_quarantine_survives_restart_from_merged_registry(tmp_path):
+    path = str(tmp_path / "fleet.json")
+    bad = {"unroll": 8}
+    clock = VirtualClock()
+    coord = make_coordinator(clock, TunedRegistry(), SharedFileBackend(path),
+                             0, 2, gate_mode="check")
+    comp = make_comp(clock)
+    comp.gate_script = lambda point: dict(point) != bad
+    m = coord.register("k", comp, VirtualClockEvaluator(clock),
+                       reference_fn=virtual_kernel(clock, 0.010))
+    for i in range(200):
+        m(i)
+        clock.advance(0.010)
+        coord.observe_busy(0.010)
+        coord.pump()
+    assert m.tuner.explorer.is_quarantined(bad)
+    coord.close()
+
+    # a NEW process (fresh registry object) on the same backend: the
+    # initial sync merges the condemned state before register()
+    clock2 = VirtualClock()
+    coord2 = make_coordinator(clock2, TunedRegistry(),
+                              SharedFileBackend(path), 1, 2,
+                              gate_mode="check")
+    m2 = coord2.register("k", make_comp(clock2),
+                         VirtualClockEvaluator(clock2),
+                         reference_fn=virtual_kernel(clock2, 0.010))
+    assert m2.tuner.explorer.is_quarantined(bad)
+    assert not m2.warm_started or m2.tuner.explorer.best_point != bad
+    m2.tuner.exhaust()
+    assert bad not in [dict(p) for p, _ in m2.tuner.explorer.history]
+
+
+def test_fleet_peer_evaluations_never_compiled_twice():
+    """After replica A explored everything, a late-joining replica B must
+    re-compile nothing but the warm-start re-validation."""
+    bus = FleetBus()
+    clock = VirtualClock()
+    coord = make_coordinator(clock, TunedRegistry(), bus, 0, 2)
+    m = coord.register("k", make_comp(clock), VirtualClockEvaluator(clock),
+                       reference_fn=virtual_kernel(clock, 0.010))
+    for i in range(200):
+        m(i)
+        clock.advance(0.010)
+        coord.observe_busy(0.010)
+        coord.pump()
+    assert m.tuner.explorer.finished
+    coord.sync_fleet()
+
+    clock2 = VirtualClock()
+    coord2 = make_coordinator(clock2, TunedRegistry(), bus, 1, 2)
+    m2 = coord2.register("k", make_comp(clock2),
+                         VirtualClockEvaluator(clock2),
+                         reference_fn=virtual_kernel(clock2, 0.010))
+    assert m2.warm_started   # fleet best seeds the warm start
+    for i in range(200):
+        m2(i)
+        clock2.advance(0.010)
+        coord2.observe_busy(0.010)
+        coord2.pump()
+    # only the warm re-validation regenerated; every other point was a
+    # peer evaluation and counted as seen
+    assert m2.tuner.accounts.regenerations == 1
+    assert [dict(p) for p, _ in m2.tuner.explorer.history] == [
+        m2.tuner.explorer.best_point]
+
+
+def test_fleet_peer_best_enters_as_candidate_through_gate():
+    """A peer-published best that FAILS this replica's local gate must be
+    rejected here (quarantined), not blindly trusted as incumbent."""
+    bus = FleetBus()
+    best = {"unroll": 8}
+    # replica 0: clean, finds and publishes `best`
+    clock = VirtualClock()
+    coord = make_coordinator(clock, TunedRegistry(), bus, 0, 2,
+                             gate_mode="check")
+    m = coord.register("k", make_comp(clock), VirtualClockEvaluator(clock),
+                       reference_fn=virtual_kernel(clock, 0.010))
+    for i in range(200):
+        m(i)
+        clock.advance(0.010)
+        coord.observe_busy(0.010)
+        coord.pump()
+    assert m.tuner.explorer.best_point == best
+    coord.sync_fleet()
+
+    # replica 1: same point fails ITS oracle (e.g. divergent hardware)
+    clock2 = VirtualClock()
+    coord2 = make_coordinator(clock2, TunedRegistry(), bus, 1, 2,
+                              gate_mode="check")
+    comp2 = make_comp(clock2)
+    comp2.gate_script = lambda point: dict(point) != best
+    m2 = coord2.register("k", comp2, VirtualClockEvaluator(clock2),
+                         reference_fn=virtual_kernel(clock2, 0.010))
+    for i in range(200):
+        m2(i)
+        clock2.advance(0.010)
+        coord2.observe_busy(0.010)
+        coord2.pump()
+    s2 = m2.tuner.stats()
+    assert s2["gate_failures"] >= 1
+    assert m2.tuner.explorer.is_quarantined(best)
+    assert s2["active_point"] != best
+    assert all(life.point != best or life.calls == 0
+               for life in m2.tuner._lives)
+
+
+def test_adopt_quarantine_aborts_canary_and_demotes_incumbent():
+    clock = VirtualClock()
+    comp = make_comp(clock)
+    tuner = OnlineAutotuner(
+        comp, VirtualClockEvaluator(clock),
+        policy=RegenerationPolicy(max_overhead_frac=1.0, invest_frac=1.0),
+        clock=clock, wake_every=1, gate=VariantGate(comp),
+        gate_mode="canary", canary_fraction=1.0, canary_calls=10_000)
+    # run until some candidate is in canary probation
+    for i in range(100):
+        tuner(i)
+        if tuner._canary is not None:
+            break
+    assert tuner._canary is not None
+    canaried = dict(tuner._canary.life.point)
+    assert tuner.adopt_quarantine(canaried, "fleet quarantine")
+    assert tuner._canary is None, "peer verdict must abort the canary"
+    assert tuner.explorer.is_quarantined(canaried)
+    # no rollback charged: this was an external verdict, not a local one
+    assert tuner.accounts.rollbacks == 0
+
+    # now demote an ACTIVE incumbent
+    tuner2 = OnlineAutotuner(
+        comp if False else make_comp(VirtualClock()),
+        VirtualClockEvaluator(clock), clock=clock, wake_every=1,
+        policy=RegenerationPolicy(max_overhead_frac=1.0, invest_frac=1.0))
+    for i in range(400):
+        tuner2(i)
+    active = dict(tuner2.stats()["active_point"])
+    assert active != {}
+    assert tuner2.adopt_quarantine(active, "fleet quarantine")
+    assert tuner2.stats()["active_point"] != active
+    # idempotent: adopting again changes nothing
+    assert not tuner2.adopt_quarantine(active, "fleet quarantine")
+
+
+def test_converged_tuner_reactivates_on_peer_best():
+    """A CONVERGED replica must wake up when a peer publishes a strictly
+    better variant, re-validate it and serve it."""
+    bus = FleetBus()
+    # replica 1 of 2: every point of this 4-point space happens to hash
+    # to stripe 0, so this replica owns nothing, proposes nothing and
+    # converges almost immediately
+    from repro.core import point_stripe
+    assert all(point_stripe({"unroll": u}, 2) == 0 for u in (1, 2, 4, 8))
+    clock = VirtualClock()
+    coord = make_coordinator(clock, TunedRegistry(), bus, 1, 2)
+    m = coord.register("k", make_comp(clock), VirtualClockEvaluator(clock),
+                       reference_fn=virtual_kernel(clock, 0.010))
+    for i in range(300):
+        m(i)
+        clock.advance(0.010)
+        coord.observe_busy(0.010)
+        coord.pump()
+    assert m.tuner.explorer.finished
+    from repro.runtime.lifecycle import TunerState
+    assert m.state is TunerState.CONVERGED
+    old_best = m.tuner.explorer.best_score
+
+    # a peer publishes a strictly better best for the same key
+    peer = TunedRegistry()
+    peer.put("k", {}, DEV, {"unroll": 8}, 0.00125)
+    peer.record_evaluation("k", {}, DEV, {"unroll": 8}, 0.00125)
+    bus.sync(peer.snapshot())
+
+    for i in range(300):
+        m(i)
+        clock.advance(0.010)
+        coord.observe_busy(0.010)
+        coord.pump()
+    assert m.tuner.explorer.best_score < old_best
+    assert m.tuner.explorer.best_point == {"unroll": 8}
+    assert m.tuner.stats()["active_point"] == {"unroll": 8}
+
+
+def test_coordinator_validates_replica_knobs():
+    with pytest.raises(ValueError):
+        TuningCoordinator(device=DEV, replica_id=2, replica_count=2)
+    with pytest.raises(ValueError):
+        TuningCoordinator(device=DEV, replica_id=-1, replica_count=2)
+    coord = TuningCoordinator(device=DEV, replica_id=3, replica_count=4)
+    assert coord.stats()["fleet"] == {
+        "replica_id": 3, "replica_count": 4, "backend": None, "syncs": 0}
+
+
+# ------------------------------------------------------------ config knobs
+def test_fleet_config_env_flags_programmatic_identical(tmp_path):
+    base = TuningConfig(enabled=False)
+    env = {
+        "REPRO_TUNE_REPLICA_ID": "1",
+        "REPRO_TUNE_REPLICA_COUNT": "4",
+        "REPRO_TUNE_REGISTRY_BACKEND": f"shared:{tmp_path}/fleet.json",
+        "REPRO_TUNE_SYNC_EVERY": "2.5",
+        "REPRO_TUNE_COMPILE_WORKERS": "auto",
+    }
+    cfg_env = TuningConfig.from_env(env, base=base)
+    parser = argparse.ArgumentParser()
+    TuningConfig.add_flags(parser, base=base)
+    cfg_flags = TuningConfig.from_flags(parser.parse_args([
+        "--replica-id", "1", "--replica-count", "4",
+        "--registry-backend", f"shared:{tmp_path}/fleet.json",
+        "--sync-every", "2.5", "--compile-workers", "auto",
+    ]), base=base)
+    cfg_prog = TuningConfig(
+        enabled=False, replica_id=1, replica_count=4,
+        registry_backend=f"shared:{tmp_path}/fleet.json",
+        sync_every_s=2.5, compile_workers="auto")
+    assert cfg_env == cfg_flags == cfg_prog
+
+
+def test_fleet_config_validation():
+    with pytest.raises(ValueError):
+        TuningConfig(replica_count=0)
+    with pytest.raises(ValueError):
+        TuningConfig(replica_id=2, replica_count=2)
+    with pytest.raises(ValueError):
+        TuningConfig(sync_every_s=-1.0)
+    with pytest.raises(ValueError):
+        TuningConfig(compile_workers="turbo")
+    with pytest.raises(ValueError):
+        TuningConfig(compile_workers=0)
+    TuningConfig(compile_workers="auto", sync_every_s=None)   # both legal
+
+
+def test_session_wires_backend_through_config_and_kwarg(tmp_path):
+    cfg = TuningConfig(
+        enabled=True, registry_backend=f"shared:{tmp_path}/fleet.json",
+        replica_id=0, replica_count=2, sync_every_s=None)
+    s = TuningSession(cfg, clock=VirtualClock(), device=DEV)
+    try:
+        be = s.coordinator.registry_backend
+        assert isinstance(be, SharedFileBackend)
+        assert s.coordinator.replica_count == 2
+        assert s.coordinator.fleet_syncs >= 1   # initial sync ran
+    finally:
+        s.close()
+    # a backend OBJECT passed to the session wins over the config string
+    bus = FleetBus()
+    s2 = TuningSession(TuningConfig(enabled=True), clock=VirtualClock(),
+                       device=DEV, registry_backend=bus)
+    try:
+        assert s2.coordinator.registry_backend is bus
+    finally:
+        s2.close()
+
+
+def test_fleet_sync_counts_surface_in_stats(tmp_path):
+    bus = FleetBus()
+    clock = VirtualClock()
+    coord = make_coordinator(clock, TunedRegistry(), bus, 0, 1)
+    m = coord.register("k", make_comp(clock), VirtualClockEvaluator(clock),
+                       reference_fn=virtual_kernel(clock, 0.010))
+    for i in range(50):
+        m(i)
+        clock.advance(0.010)
+        coord.observe_busy(0.010)
+        coord.pump()
+    s = coord.stats()
+    assert s["fleet"]["backend"] == "FleetBus"
+    assert s["fleet"]["syncs"] == coord.fleet_syncs >= 2
+    # evaluations flushed to the shared ledger as they landed
+    state = bus.peek()
+    evals = state["__registry_meta__"]["evaluations"]
+    assert sum(len(v) for v in evals.values()) == len(
+        m.tuner.explorer.history)

@@ -10,9 +10,9 @@ import dataclasses
 import pytest
 
 from repro.core import (
-    Compilette, OnlineAutotuner, Param, RegenerationPolicy, TunedRegistry,
-    VariantGate, VirtualClock, VirtualClockEvaluator, product_space,
-    virtual_kernel,
+    Compilette, FleetBus, OnlineAutotuner, Param, RegenerationPolicy,
+    TunedRegistry, VariantGate, VirtualClock, VirtualClockEvaluator,
+    product_space, virtual_kernel,
 )
 from repro.core.gate import GATE_MODES
 from repro.runtime.coordinator import TuningCoordinator
@@ -584,3 +584,113 @@ def test_fault_replay_compile_failures_quarantine_without_stall():
     assert t["quarantined"] >= 1
     assert t["served_wrong_calls"] == 0
     assert t["overhead_pct"] <= 5.0
+
+
+# ------------------------------------------------------------ fleet gate
+def _fleet_canary_coordinator(clock, *, rid, bus):
+    return TuningCoordinator(
+        device="test:v", clock=clock, registry=TunedRegistry(),
+        gate_mode="canary", canary_fraction=0.5, canary_calls=4,
+        policy=RegenerationPolicy(max_overhead_frac=1.0, invest_frac=1.0),
+        replica_id=rid, replica_count=2, registry_backend=bus,
+        sync_every_s=None)
+
+
+def test_canary_rollback_quarantines_fleet_wide():
+    """A tail regression caught by replica 0's canary condemns the point
+    for the whole fleet: after one sync, replica 1 holds the quarantine,
+    never serves the lying point, and adopts replica 0's honest best as a
+    CANDIDATE through its own canary — one rollback per fleet, not one
+    per replica."""
+    bus = FleetBus()
+    lie = {"unroll": 8}
+    clock_a, clock_b = VirtualClock(), VirtualClock()
+    coord_a = _fleet_canary_coordinator(clock_a, rid=0, bus=bus)
+    coord_b = _fleet_canary_coordinator(clock_b, rid=1, bus=bus)
+
+    def lying(clock):
+        return make_lying_compilette(
+            clock, "k", honest_s=lambda p: 0.010 / p["unroll"],
+            lie_point=lie, lie_score_s=0.001, lie_serve_s=0.040)
+
+    m_a = coord_a.register("k", lying(clock_a), VirtualClockEvaluator(clock_a),
+                           reference_fn=virtual_kernel(clock_a, 0.010))
+    m_b = coord_b.register("k", lying(clock_b), VirtualClockEvaluator(clock_b),
+                           reference_fn=virtual_kernel(clock_b, 0.010))
+    # all unroll points stripe to replica 0: replica 1 owns nothing and
+    # can only ever receive work through the fleet adoption path
+    for i in range(50):
+        m_b(i)
+        clock_b.advance(0.010)
+        coord_b.observe_busy(0.010)
+        coord_b.pump()
+    assert m_b.tuner.explorer.finished
+
+    for i in range(400):
+        m_a(i)
+        clock_a.advance(0.010)
+        coord_a.observe_busy(0.010)
+        coord_a.pump()
+    s_a = m_a.tuner.stats()
+    assert s_a["rollbacks"] == 1
+    assert m_a.tuner.explorer.is_quarantined(lie)
+    coord_a.sync_fleet()
+
+    coord_b.sync_fleet()
+    assert m_b.tuner.explorer.is_quarantined(lie)
+    for i in range(400):
+        m_b(i)
+        clock_b.advance(0.010)
+        coord_b.observe_busy(0.010)
+        coord_b.pump()
+    s_b = m_b.tuner.stats()
+    # the fleet paid for exactly one rollback; the peer adopted the
+    # verdict instead of re-learning it in production
+    assert s_b["rollbacks"] == 0
+    assert s_b["gate_failures"] == 0
+    assert all(life.point != lie or life.calls == 0
+               for life in m_b.tuner._lives)
+    # peer best arrived as a canaried CANDIDATE, never a blind incumbent
+    assert s_b["canary_promotions"] >= 1
+    assert s_b["swaps"] == s_b["canary_promotions"]
+    assert s_b["active_point"] == {"unroll": 4}
+
+
+def test_fleet_quarantine_blocks_warm_start_after_restart():
+    """Replica 1 restarts from the merged fleet state: the condemned
+    point neither warm-starts nor re-enters its strategy even though the
+    registry file never saw replica 1 condemn anything itself."""
+    bus = FleetBus()
+    lie = {"unroll": 8}
+    clock_a = VirtualClock()
+    coord_a = _fleet_canary_coordinator(clock_a, rid=0, bus=bus)
+    comp_a = make_lying_compilette(
+        clock_a, "k", honest_s=lambda p: 0.010 / p["unroll"],
+        lie_point=lie, lie_score_s=0.001, lie_serve_s=0.040)
+    m_a = coord_a.register("k", comp_a, VirtualClockEvaluator(clock_a),
+                           reference_fn=virtual_kernel(clock_a, 0.010))
+    for i in range(400):
+        m_a(i)
+        clock_a.advance(0.010)
+        coord_a.observe_busy(0.010)
+        coord_a.pump()
+    coord_a.sync_fleet()
+
+    # a fresh replica-1 process joining the fleet after the fact
+    clock_b = VirtualClock()
+    coord_b = _fleet_canary_coordinator(clock_b, rid=1, bus=bus)
+    comp_b = make_virtual_compilette(clock_b, "k",
+                                     lambda p: 0.010 / p["unroll"])
+    m_b = coord_b.register("k", comp_b, VirtualClockEvaluator(clock_b),
+                           reference_fn=virtual_kernel(clock_b, 0.010))
+    coord_b.sync_fleet()
+    assert m_b.tuner.explorer.is_quarantined(lie)
+    assert not m_b.warm_started or m_b.tuner.stats()["active_point"] != lie
+    for i in range(200):
+        m_b(i)
+        clock_b.advance(0.010)
+        coord_b.observe_busy(0.010)
+        coord_b.pump()
+    assert all(life.point != lie or life.calls == 0
+               for life in m_b.tuner._lives)
+    assert m_b.tuner.stats()["rollbacks"] == 0

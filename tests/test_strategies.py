@@ -523,3 +523,173 @@ def test_strategy_converges_with_prefetch_through_farm(strategy, workers):
     # but-never-proposed points may add a few more entries on top)
     assert (coord.stats()["generation_cache"]["entries"]
             >= strat.state.n_reported)
+
+
+# ------------------------------------------------- parity: fleet partition
+def test_point_stripe_is_deterministic_and_validates():
+    from repro.core import point_stripe
+
+    p = {"unroll": 4, "sched": 1}
+    assert point_stripe(p, 4) == point_stripe(dict(p), 4)
+    assert point_stripe(p, 1) == 0
+    with pytest.raises(ValueError):
+        point_stripe(p, 0)
+    # stripes partition by construction: one owner per point at every N
+    sp = small_space()
+    for n in (2, 3, 4):
+        owners = {sp.key(q): point_stripe(q, n) for q in sp.iter_valid()}
+        assert all(0 <= o < n for o in owners.values())
+
+
+@pytest.mark.parametrize("strategy", ALL_STRATEGIES)
+def test_partition_proposals_stay_inside_the_stripe(strategy):
+    """Satellite acceptance: under partition(i, n) every strategy proposes
+    only points of stripe i, and peek(n) never leaks a foreign point."""
+    from repro.core import point_stripe
+
+    sp = small_space()
+    n = 2
+    for rid in range(n):
+        strat = make_strategy(strategy, sp)
+        strat.partition(rid, n)
+        while True:
+            for q in strat.peek(3):
+                assert point_stripe(q, n) == rid, (strategy, rid, q)
+            p = strat.next_point()
+            if p is None:
+                break
+            assert point_stripe(p, n) == rid, (strategy, rid, p)
+            strat.report(p, cost(p))
+        assert strat.finished
+
+
+@pytest.mark.parametrize("strategy", ["random", "greedy"])
+def test_partition_stripes_are_disjoint_and_jointly_exhaustive(strategy):
+    """For the exhaustive strategies the stripes cover the whole space
+    with no overlap: the fleet pays for every point exactly once.
+    (two_phase is deliberately excluded: its phase 2 enumerates around
+    the stripe-local phase-1 winner, so per-stripe coverage is a subset.)
+    """
+    sp = small_space()
+    valid = {sp.key(p) for p in sp.iter_valid()}
+    n = 2
+    per_stripe = []
+    for rid in range(n):
+        strat = make_strategy(strategy, sp)
+        strat.partition(rid, n)
+        seen = set()
+        while True:
+            p = strat.next_point()
+            if p is None:
+                break
+            key = sp.key(p)
+            assert key not in seen, (strategy, rid, p)
+            seen.add(key)
+            strat.report(p, cost(p))
+        per_stripe.append(seen)
+    union = set().union(*per_stripe)
+    assert union == valid, strategy
+    for a in range(n):
+        for b in range(a + 1, n):
+            assert not per_stripe[a] & per_stripe[b], (strategy, a, b)
+
+
+@pytest.mark.parametrize("strategy", ALL_STRATEGIES)
+def test_partition_exempts_warm_start_seeds(strategy):
+    """A warm-start seed is proposed on EVERY replica regardless of its
+    stripe: the fleet best must stay locally re-validatable."""
+    from repro.core import point_stripe
+
+    sp = small_space()
+    seed_pt = {"unroll": 4, "sched": 0}
+    n = 4
+    for rid in range(n):
+        strat = make_strategy(strategy, sp, seed_points=[seed_pt])
+        strat.partition(rid, n)
+        assert strat.next_point() == seed_pt, (strategy, rid)
+    # sanity: the seed is NOT owned by every stripe
+    assert len({point_stripe(seed_pt, n)}) == 1
+
+
+@pytest.mark.parametrize("strategy", ALL_STRATEGIES)
+def test_inject_candidate_bypasses_stripe_but_not_gatekeeping(strategy):
+    """An injected peer best is proposed exactly once on a foreign
+    replica; quarantined or already-measured points are refused."""
+    from repro.core import point_stripe
+
+    sp = small_space()
+    peer_best = {"unroll": 8, "sched": 1}
+    n = 3
+    foreign = next(r for r in range(n)
+                   if r != point_stripe(peer_best, n))
+    strat = make_strategy(strategy, sp)
+    strat.partition(foreign, n)
+    assert strat.inject_candidate(peer_best)
+    assert strat.next_point() == peer_best
+    strat.report(peer_best, cost(peer_best))
+    # idempotent: re-injection after local measurement is refused
+    assert not strat.inject_candidate(peer_best)
+    # quarantined points are refused outright
+    bad = {"unroll": 1, "sched": 0}
+    strat.quarantine(bad)
+    assert not strat.inject_candidate(bad)
+    # and holes are refused
+    assert not strat.inject_candidate({"unroll": 3, "sched": 1})
+
+
+@pytest.mark.parametrize("strategy", ALL_STRATEGIES)
+def test_partition_validates_and_single_replica_is_identity(strategy):
+    sp = small_space()
+    strat = make_strategy(strategy, sp)
+    with pytest.raises(ValueError):
+        strat.partition(2, 2)
+    with pytest.raises(ValueError):
+        strat.partition(-1, 2)
+    with pytest.raises(ValueError):
+        strat.partition(0, 0)
+    # partition(0, 1) is the identity: full coverage
+    strat.partition(0, 1)
+    seen = []
+    while True:
+        p = strat.next_point()
+        if p is None:
+            break
+        seen.append(sp.key(p))
+        strat.report(p, cost(p))
+    if strategy in ("random", "greedy"):
+        assert set(seen) == {sp.key(p) for p in sp.iter_valid()}
+
+
+@pytest.mark.parametrize("strategy", ALL_STRATEGIES)
+def test_mark_seen_purges_pending_peeks(strategy):
+    """A peer's published evaluation retires a locally prefetched point:
+    the pending compile must never be served to the proposal stream."""
+    sp = small_space()
+    strat = make_strategy(strategy, sp)
+    ahead = strat.peek(3)
+    assert len(ahead) == 3
+    victim = ahead[1]
+    assert strat.mark_seen(victim)              # purged from the buffer
+    assert not strat.mark_seen(victim)          # already seen AND purged
+    nxt = [strat.next_point() for _ in range(2)]
+    assert victim not in nxt
+
+
+def test_mark_seen_never_cancels_a_pending_injected_candidate():
+    """The fleet best travels with its own evaluation record: a repeat
+    sync marks it seen again while it is still queued, which must not
+    purge it (inject_candidate's dedup would refuse to re-queue it and
+    the adoption would be silently lost)."""
+    sp = small_space(with_phase2=False)
+    ex = make_strategy("random", sp)
+    ex.partition(1, 2)
+    peer_best = {"unroll": 4}
+    assert ex.inject_candidate(peer_best)
+    # the same sync (and every later one) also publishes the evaluation
+    assert ex.mark_seen(peer_best) is False
+    assert ex.mark_seen(peer_best) is False
+    got = ex.next_point()
+    assert got == peer_best
+    # once locally measured, further mark_seen calls stay no-ops
+    ex.report(got, 0.001)
+    assert ex.mark_seen(peer_best) is False
