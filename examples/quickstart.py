@@ -192,6 +192,80 @@ def main_fleet() -> None:
         raise SystemExit("fleet re-compiled peers' work")
 
 
+def main_transfer() -> None:
+    """Transfer plane: an UNSEEN device warm-starts from a similar one.
+
+    Device A tunes a 16-point space to convergence and publishes its
+    best into a shared registry — stamped with its ``DeviceTraits``.
+    Device B has a fingerprint the registry has *never* seen, so the
+    exact warm start misses; with ``transfer=True`` the nearest-
+    fingerprint lookup ranks A's best by trait similarity and injects
+    it as a gated CANDIDATE seed. B serves the fleet optimum within two
+    regenerations instead of re-sweeping the space from cold.
+    """
+    from repro.core import TunedRegistry, VirtualClock, VirtualClockEvaluator
+
+    registry = TunedRegistry()   # shared across both devices
+
+    def cost(rate, p) -> float:
+        return rate / p["unroll"] + 0.0005 * p["lane"]
+
+    def bring_up(device, rate, transfer, calls):
+        clock = VirtualClock()
+        session = repro.TuningSession(repro.TuningConfig(
+            max_overhead=1.0, invest=0.5, pump_every=1,
+            gate_mode="check", transfer=transfer),
+            clock=clock, registry=registry, device=device)
+
+        @repro.tuned(session=session, jit=False, gen_cost_s=0.002,
+                     space=product_space([
+                         Param("unroll", (1, 2, 4, 8), phase=1),
+                         Param("lane", (0, 1, 2, 3), phase=1)]),
+                     evaluator=VirtualClockEvaluator(
+                         clock, score_fn=lambda f: cost(rate, f.point)))
+        def kernel(step, *, unroll, lane):
+            clock.advance(cost(rate, {"unroll": unroll, "lane": lane}))
+            return step
+
+        for step in range(calls):
+            kernel(step)
+        return kernel, session
+
+    # device A: a known core explores all 16 points and publishes its
+    # best (trait-stamped) into the shared registry
+    k_a, s_a = bring_up("gpu:sim-a", 0.010, False, 600)
+    sa = k_a.stats()
+    print(f"device A (cold): explored {sa['n_explored']}/16 variants, "
+          f"best {k_a.best_point}")
+    s_a.close()
+
+    # device B: same platform, different silicon (20% slower clock) and
+    # a fingerprint no registry entry matches — only the transfer plane
+    # can warm it up, and only through the gate
+    k_b, s_b = bring_up("gpu:sim-b", 0.012, True, 40)
+    sb = k_b.stats()
+    fleet = s_b.stats()
+    print(f"device B (transfer): {fleet['transfer_hits']} seeds injected, "
+          f"{fleet['transfer_adopted']} adopted, best found in "
+          f"{fleet['seeded_regens_to_best']:.0f} regen(s) after "
+          f"{sb['n_explored']} evaluations ({sb['gate_checks']} gate "
+          f"checks), best {k_b.best_point}")
+    s_b.close()
+
+    if k_a.best_point != {"unroll": 8, "lane": 0}:
+        raise SystemExit(f"device A missed the optimum: {k_a.best_point}")
+    if fleet["transfer_hits"] < 1 or not k_b.handle.transfer_seed_keys:
+        raise SystemExit("no transfer seeds reached device B")
+    if k_b.best_point != {"unroll": 8, "lane": 0}:
+        raise SystemExit(f"device B missed the optimum: {k_b.best_point}")
+    if fleet["seeded_regens_to_best"] is None \
+            or fleet["seeded_regens_to_best"] > 2:
+        raise SystemExit("transfer seed did not shortcut the search "
+                         f"(regens to best: {fleet['seeded_regens_to_best']})")
+    if sb["gate_checks"] < 1:
+        raise SystemExit("transfer seed bypassed the gate")
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--virtual", action="store_true",
@@ -200,8 +274,13 @@ if __name__ == "__main__":
     ap.add_argument("--fleet", action="store_true",
                     help="two-replica fleet demo: shared registry backend "
                          "+ partitioned exploration (virtual, no hardware)")
+    ap.add_argument("--transfer", action="store_true",
+                    help="transfer-plane demo: an unseen device warm-"
+                         "starts from a trait-similar one (virtual)")
     args = ap.parse_args()
-    if args.fleet:
+    if args.transfer:
+        main_transfer()
+    elif args.fleet:
         main_fleet()
     elif args.virtual:
         main_virtual()

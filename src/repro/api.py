@@ -168,6 +168,12 @@ class TuningConfig:
     replica_count: int = 1            # fleet size (1 = no partitioning)
     registry_backend: str | None = None   # shared backend spec
     sync_every_s: float | None = 1.0  # fleet sync cadence (None = every pump)
+    # transfer plane: on a fingerprint miss, seed the search with the
+    # top-k foreign bests ranked by device-trait similarity; seeds flow
+    # through the gate/canary path as CANDIDATEs, never blind incumbents
+    transfer: bool = False            # cross-device transfer seeding
+    transfer_top_k: int = 3           # foreign bests injected per miss
+    min_similarity: float = 0.75      # trait-similarity floor in (0, 1]
 
     def __post_init__(self) -> None:
         if self.kernel_tuning not in KERNEL_TUNING_MODES:
@@ -209,6 +215,13 @@ class TuningConfig:
         if self.canary_calls < 1:
             raise ValueError(
                 f"canary_calls must be >= 1, got {self.canary_calls}")
+        if self.transfer_top_k < 1:
+            raise ValueError(
+                f"transfer_top_k must be >= 1, got {self.transfer_top_k}")
+        if not 0.0 < self.min_similarity <= 1.0:
+            raise ValueError(
+                f"min_similarity must be in (0, 1], "
+                f"got {self.min_similarity}")
 
     # -------------------------------------------------------- derived views
     @property
@@ -242,19 +255,21 @@ class TuningConfig:
     # ------------------------------------------------------------------ env
     # field → parser; fields absent here parse as plain strings
     _BOOL_FIELDS = ("enabled", "charge_init", "seq_buckets",
-                    "async_generation")
-    _FLOAT_FIELDS = ("max_overhead", "invest", "canary_fraction")
+                    "async_generation", "transfer")
+    _FLOAT_FIELDS = ("max_overhead", "invest", "canary_fraction",
+                     "min_similarity")
     _OPT_FLOAT_FIELDS = ("slo_s", "slo_quantile", "idle_evict_s",
                          "gate_rtol", "gate_atol", "sync_every_s")
     _INT_FIELDS = ("pump_every", "prefetch", "canary_calls",
-                   "replica_id", "replica_count")
+                   "replica_id", "replica_count", "transfer_top_k")
     _OPT_INT_FIELDS = ("cache_entries", "cache_bytes")
     _OPT_STR_FIELDS = ("registry_path", "registry_backend")
     # environment/CLI spellings that map onto differently named fields
     _FIELD_ALIASES = {"autotune": "enabled",
                       "kernel_strategies": "strategies",
                       "gate": "gate_mode",
-                      "sync_every": "sync_every_s"}
+                      "sync_every": "sync_every_s",
+                      "transfer_k": "transfer_top_k"}
 
     @classmethod
     def _parse_field(cls, field: str, raw: str) -> Any:
@@ -417,6 +432,20 @@ class TuningConfig:
         g.add_argument("--sync-every", type=float, dest="sync_every_s",
                        default=base.sync_every_s,
                        help="fleet: seconds between registry syncs")
+        g.add_argument("--transfer", action="store_true",
+                       default=base.transfer,
+                       help="transfer plane: on a fingerprint miss, seed "
+                            "the search with foreign bests from trait-"
+                            "similar devices (gated CANDIDATEs)")
+        g.add_argument("--transfer-top-k", type=int,
+                       dest="transfer_top_k",
+                       default=base.transfer_top_k,
+                       help="foreign bests injected per fingerprint miss")
+        g.add_argument("--min-similarity", type=float,
+                       dest="min_similarity",
+                       default=base.min_similarity,
+                       help="device-trait similarity floor in (0, 1] "
+                            "below which foreign bests are not seeded")
         return parser
 
     @classmethod
@@ -465,6 +494,9 @@ class TuningConfig:
             replica_count=args.replica_count,
             registry_backend=args.registry_backend,
             sync_every_s=args.sync_every_s,
+            transfer=args.transfer,
+            transfer_top_k=args.transfer_top_k,
+            min_similarity=args.min_similarity,
         )
 
 
@@ -765,6 +797,9 @@ class TuningSession:
                     registry_backend if registry_backend is not None
                     else cfg.registry_backend),
                 sync_every_s=cfg.sync_every_s,
+                transfer=cfg.transfer,
+                transfer_top_k=cfg.transfer_top_k,
+                min_similarity=cfg.min_similarity,
             )
         self.coordinator._session = self
         self._plane: KernelTuningPlane | None = getattr(

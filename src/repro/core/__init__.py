@@ -32,6 +32,7 @@ from repro.core.evaluator import (
     virtual_kernel,
 )
 from repro.core.explorer import (
+    CostModelSearch,
     GreedyNeighborhood,
     RandomSearch,
     SearchStrategy,
@@ -40,6 +41,7 @@ from repro.core.explorer import (
     make_strategy,
     point_stripe,
     register_strategy,
+    strategy_accepts,
 )
 from repro.core.gate import GATE_MODES, VariantGate
 from repro.core.persistence import (
@@ -53,8 +55,21 @@ from repro.core.persistence import (
     device_fingerprint,
     merge_snapshots,
 )
-from repro.core.profiles import ALL_PROFILES, EQUIVALENT_PAIRS, TPU_V5E, DeviceProfile
+from repro.core.profiles import (
+    ALL_PROFILES,
+    EQUIVALENT_PAIRS,
+    TPU_V5E,
+    DeviceProfile,
+    scaled_profile,
+)
 from repro.core.static_tuner import static_autotune
+from repro.core.transfer import (
+    DeviceTraits,
+    TransferSeed,
+    device_traits,
+    similarity,
+    transfer_seeds,
+)
 from repro.core.tuning_space import (
     Param,
     Point,
@@ -93,10 +108,12 @@ __all__ = [
     "TwoPhaseExplorer",
     "RandomSearch",
     "GreedyNeighborhood",
+    "CostModelSearch",
     "available_strategies",
     "make_strategy",
     "point_stripe",
     "register_strategy",
+    "strategy_accepts",
     "FleetBus",
     "LocalBackend",
     "RegistryBackend",
@@ -110,7 +127,13 @@ __all__ = [
     "EQUIVALENT_PAIRS",
     "TPU_V5E",
     "DeviceProfile",
+    "scaled_profile",
     "static_autotune",
+    "DeviceTraits",
+    "TransferSeed",
+    "device_traits",
+    "similarity",
+    "transfer_seeds",
     "Param",
     "Point",
     "TuningSpace",

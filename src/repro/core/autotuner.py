@@ -48,13 +48,45 @@ from repro.core.decision import (
     TuningAccounts,
 )
 from repro.core.evaluator import Measurement
-from repro.core.explorer import SearchStrategy, make_strategy
+from repro.core.explorer import SearchStrategy, make_strategy, strategy_accepts
 from repro.core.gate import GATE_MODES, VariantGate
 from repro.core.tuning_space import Point
 
 # An external arbiter for regeneration budget (the coordinator's shared
 # budget): gate(accounts, now_s, next_cost_estimate_s) -> allowed.
 BudgetGate = Callable[[TuningAccounts, float, float], bool]
+
+
+def _model_cost_fn(
+    compilette: Compilette, specialization: dict[str, Any]
+) -> Callable[[Any], float] | None:
+    """Per-point predicted execution cost from the compilette's model.
+
+    Wired into model-based strategies (``strategy="cost_model"``). The
+    model is probed once on the space's default point: a model that
+    cannot price this backend at all (e.g. it needs a device profile
+    and none is attached) raises there and opts the strategy back into
+    its model-free order instead of ranking everything ``inf``.
+    """
+    model = getattr(compilette, "cost_model", None)
+    if model is None:
+        return None
+    virtual = getattr(compilette, "virtual", None)
+    profile = (virtual[1] if isinstance(virtual, tuple) and len(virtual) == 2
+               else None)
+    spec = dict(specialization or {})
+    try:
+        model(dict(compilette.space.default_point()), dict(spec), profile)
+    except Exception:
+        return None
+
+    def cost_fn(point: Any) -> float:
+        try:
+            return float(model(dict(point), dict(spec), profile))
+        except Exception:
+            return float("inf")
+
+    return cost_fn
 
 
 @dataclasses.dataclass
@@ -154,9 +186,18 @@ class OnlineAutotuner:
         self._latency_hist = LatencyHistogram()
         # `explorer` (a pre-built instance) wins over `strategy` (a registry
         # name or instance); both default to the paper's two-phase order.
+        # Model-based strategies additionally receive the compilette's
+        # cost model (as a per-point `cost_fn`) when one is attached.
+        strategy_kwargs: dict[str, Any] = {}
+        if (explorer is None and isinstance(strategy, str)
+                and strategy_accepts(strategy, "cost_fn")):
+            cost_fn = _model_cost_fn(compilette, self.specialization)
+            if cost_fn is not None:
+                strategy_kwargs["cost_fn"] = cost_fn
         self.explorer = explorer or make_strategy(
             strategy, compilette.space,
             base_point=base_point, seed_points=seed_points,
+            **strategy_kwargs,
         )
         self.accounts = TuningAccounts(app_start_s=self._clock())
         self._lock = threading.Lock()

@@ -44,14 +44,21 @@ Built-in strategies:
     parameter at a time around the incumbent best, recenter on
     improvement, and restart from an unseen point at local optima (so
     small spaces are still covered exhaustively).
+  * ``cost_model`` (:class:`CostModelSearch`) — model-based: rank the
+    unexplored points by the compilette's analytical cost-model
+    predictions, continuously recalibrated against observed scores
+    (per-parameter-value residuals), so the cheapest-looking candidates
+    are measured first and systematic model bias self-corrects.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import hashlib
+import inspect
 import itertools
 import json
+import math
 import random as _random
 from typing import Any, Callable, Iterator, Sequence
 
@@ -399,6 +406,19 @@ def available_strategies() -> tuple[str, ...]:
     return tuple(sorted(STRATEGIES))
 
 
+def strategy_accepts(strategy: str, param: str) -> bool:
+    """Does the named strategy's constructor take keyword ``param``?
+
+    Lets callers wire optional capabilities (e.g. a compilette cost
+    model as ``cost_fn``) only into strategies that can exploit them,
+    without every strategy having to swallow ``**kwargs``.
+    """
+    cls = STRATEGIES.get(strategy)
+    if cls is None:
+        return False
+    return param in inspect.signature(cls.__init__).parameters
+
+
 def make_strategy(
     strategy: "str | SearchStrategy",
     space: TuningSpace,
@@ -591,3 +611,103 @@ class GreedyNeighborhood(SearchStrategy):
                 if self.space.key(q) not in self._seen:
                     return q
             return None
+
+
+# ------------------------------------------------------------- cost model
+@register_strategy("cost_model")
+class CostModelSearch(SearchStrategy):
+    """Model-based search: measure the cheapest-*predicted* points first.
+
+    Every valid point is priced once by ``cost_fn`` (the compilette's
+    analytical cost model — ``OnlineAutotuner`` wires it automatically
+    when the compilette carries one); proposals then pop the pending
+    point with the lowest *calibrated* prediction. Calibration is a
+    per-parameter-value residual table: each finite observation records
+    ``ln(observed / predicted)`` against every ``(param, value)`` the
+    point contains, and pending predictions are scaled by the mean
+    residual of their own values — so a model that systematically
+    mis-prices, say, ``unroll=8`` sinks those candidates without
+    touching the rest of the ranking. Without a ``cost_fn`` the
+    strategy degrades to deterministic enumeration order. Either way
+    the whole space is eventually proposed (exhaustive on small
+    spaces), seeds first, fully deterministic.
+    """
+
+    def __init__(
+        self,
+        space: TuningSpace,
+        base_point: Point | None = None,
+        seed_points: "Sequence[Point]" = (),
+        *,
+        cost_fn: Callable[[Point], float] | None = None,
+    ) -> None:
+        super().__init__(space, base_point=base_point, seed_points=seed_points)
+        self._cost_fn = cost_fn
+        self._seed_queue: list[Point] = [dict(p) for p in self._seeds]
+        seed_keys = {space.key(p) for p in self._seeds}
+        # pending: every valid point not yet proposed, keyed for O(1)
+        # removal; _rank breaks prediction ties by enumeration order so
+        # the proposal sequence is a pure function of the observations
+        self._pending: dict[tuple, Point] = {}
+        self._rank: dict[tuple, int] = {}
+        self._predicted: dict[tuple, float] = {}
+        for i, p in enumerate(space.iter_valid()):
+            key = space.key(p)
+            if key in self._pending or key in seed_keys:
+                continue
+            self._pending[key] = dict(p)
+            self._rank[key] = i
+            self._predicted[key] = self._predict(p)
+        # calibration: per (param, canonical value) running mean of
+        # ln(observed / predicted) over finite observations
+        self._resid_sum: dict[tuple[str, str], float] = {}
+        self._resid_n: dict[tuple[str, str], int] = {}
+
+    def _predict(self, point: Point) -> float:
+        if self._cost_fn is None:
+            return 0.0   # no model: constant prediction = enumeration order
+        try:
+            pred = float(self._cost_fn(dict(point)))
+        except Exception:
+            return float("inf")
+        return pred if math.isfinite(pred) and pred > 0.0 else float("inf")
+
+    def _value_keys(self, point: Point) -> list[tuple[str, str]]:
+        return [(str(k), json.dumps(v, sort_keys=True, default=str))
+                for k, v in sorted(dict(point).items())]
+
+    def _calibrated(self, key: tuple, point: Point) -> float:
+        pred = self._predicted.get(key, float("inf"))
+        if not math.isfinite(pred):
+            return pred
+        factors = [self._resid_sum[vk] / self._resid_n[vk]
+                   for vk in self._value_keys(point)
+                   if self._resid_n.get(vk)]
+        if not factors:
+            return pred
+        return pred * math.exp(sum(factors) / len(factors))
+
+    def _observe(self, point: Point, score_s: float, improved: bool) -> None:
+        if self._cost_fn is None:
+            return
+        if not (isinstance(score_s, (int, float)) and math.isfinite(score_s)
+                and score_s > 0.0):
+            return
+        pred = self._predict(point)
+        if not math.isfinite(pred):
+            return
+        residual = math.log(float(score_s) / pred)
+        for vk in self._value_keys(point):
+            self._resid_sum[vk] = self._resid_sum.get(vk, 0.0) + residual
+            self._resid_n[vk] = self._resid_n.get(vk, 0) + 1
+
+    def _propose(self) -> Point | None:
+        if self._seed_queue:
+            return self._seed_queue.pop(0)
+        if not self._pending:
+            return None
+        key = min(
+            self._pending,
+            key=lambda k: (self._calibrated(k, self._pending[k]),
+                           self._rank[k]))
+        return self._pending.pop(key)

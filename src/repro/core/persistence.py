@@ -149,6 +149,7 @@ class TunedRegistry:
         point: Point,
         score_s: float,
         strategy: str | None = None,
+        traits: dict[str, float] | None = None,
     ) -> None:
         k = self.key(kernel, specialization, device)
         with self._mu:
@@ -161,10 +162,18 @@ class TunedRegistry:
                 if strategy is not None:
                     # provenance: which search strategy found this best
                     entry["strategy"] = str(strategy)
+                if traits is not None:
+                    # device-trait vector: the transfer plane ranks this
+                    # entry against dissimilar-fingerprint lookups
+                    entry["traits"] = dict(traits)
                 self._table[k] = entry
             else:
                 # a worse score still proves the entry is in use
                 cur["gen"] = self._generation
+                if traits is not None and "traits" not in cur:
+                    # a pre-transfer entry learns its device traits the
+                    # first time the device describes itself
+                    cur["traits"] = dict(traits)
 
     def get(
         self, kernel: str, specialization: dict[str, Any], device: str
@@ -206,6 +215,45 @@ class TunedRegistry:
             if point is not None:
                 return point
         return None
+
+    def cross_device_entries(
+        self,
+        kernel: str,
+        specialization: dict[str, Any],
+        *,
+        exclude_device: str | None = None,
+    ) -> list[tuple[str, dict[str, Any]]]:
+        """Best entries for this (kernel, spec) under OTHER device keys.
+
+        The transfer plane's raw material after a fingerprint miss: every
+        foreign device's best row — with its persisted trait vector, when
+        recorded — quarantine-filtered under its OWN key (a point a
+        similar device condemned never travels). Rows are deep copies
+        sorted by device key, so downstream ranking is deterministic and
+        cannot mutate the registry.
+        """
+        probe = json.loads(self.key(kernel, specialization, ""))
+        out: list[tuple[str, dict[str, Any]]] = []
+        with self._mu:
+            for k, entry in self._table.items():
+                try:
+                    parsed = json.loads(k)
+                except (json.JSONDecodeError, TypeError):
+                    continue
+                if (not isinstance(parsed, dict)
+                        or parsed.get("k") != probe["k"]
+                        or parsed.get("s") != probe["s"]):
+                    continue
+                dev = parsed.get("d")
+                if (not isinstance(dev, str) or not dev
+                        or dev == exclude_device):
+                    continue
+                if _canon(entry.get("point", {})) in self._quarantine.get(
+                        k, {}):
+                    continue
+                out.append((dev, copy.deepcopy(entry)))
+        out.sort(key=lambda row: row[0])
+        return out
 
     def __len__(self) -> int:
         with self._mu:
@@ -254,6 +302,39 @@ class TunedRegistry:
             for dev in (device, *device_fallbacks(device)):
                 k = self.key(kernel, specialization, dev)
                 for pk in self._quarantine.get(k, {}):
+                    if pk in seen:
+                        continue
+                    seen.add(pk)
+                    try:
+                        out.append(dict(json.loads(pk)))
+                    except (json.JSONDecodeError, TypeError):
+                        continue
+        return out
+
+    def fleet_quarantined_points(
+        self, kernel: str, specialization: dict[str, Any]
+    ) -> list[Point]:
+        """Condemned points for this (kernel, spec) under ANY device key.
+
+        The transfer plane's blocklist: a transfer seed that failed one
+        device's oracle must never be re-seeded on any other device —
+        the verdict travels with the registry, not with the device that
+        paid for it.
+        """
+        probe = json.loads(self.key(kernel, specialization, ""))
+        out: list[Point] = []
+        seen: set[str] = set()
+        with self._mu:
+            for k, points in self._quarantine.items():
+                try:
+                    parsed = json.loads(k)
+                except (json.JSONDecodeError, TypeError):
+                    continue
+                if (not isinstance(parsed, dict)
+                        or parsed.get("k") != probe["k"]
+                        or parsed.get("s") != probe["s"]):
+                    continue
+                for pk in points:
                     if pk in seen:
                         continue
                     seen.add(pk)
@@ -415,7 +496,18 @@ class TunedRegistry:
                     adopted["point"] = dict(entry["point"])
                     adopted["score_s"] = float(entry["score_s"])
                     adopted["gen"] = self._generation
+                    if isinstance(entry.get("traits"), dict):
+                        adopted["traits"] = dict(entry["traits"])
+                    else:
+                        adopted.pop("traits", None)
                     self._table[k] = adopted
+                elif ("traits" not in cur
+                        and isinstance(entry.get("traits"), dict)):
+                    # trait union: the key names one device, so a peer's
+                    # trait vector for it applies to the held best too —
+                    # without this a traits-less side would flap the
+                    # merged metadata across sync order
+                    cur["traits"] = dict(entry["traits"])
             # fleet quarantine always wins over a previously held best
             for k in list(self._table):
                 if (_canon(self._table[k].get("point", {}))
@@ -480,6 +572,9 @@ def merge_snapshots(
       coincides with last-write-wins); exact score ties break on the
       canonical JSON of the entry so the result never depends on
       argument order;
+    * per-entry device traits — unioned: the winning entry keeps its
+      trait vector, and a winner missing one adopts a candidate's (the
+      key names one device, so any candidate's traits describe it);
     * quarantine — unioned: a point condemned by ANY replica is
       condemned fleet-wide, and a condemned best is dropped;
     * evaluations — unioned with min-score: work any replica already
@@ -537,9 +632,21 @@ def merge_snapshots(
                       if _canon(e["point"]) not in quarantine.get(k, {})]
         if not candidates:
             continue
-        out[k] = copy.deepcopy(min(
+        winner = copy.deepcopy(min(
             candidates,
             key=lambda e: (float(e["score_s"]), _canon(e))))
+        # trait union: the key names ONE device, so any candidate's trait
+        # vector describes the winner's device too. A winner missing its
+        # traits adopts the (deterministically chosen) donor's — without
+        # this, merging {entry+traits} with {entry} would keep or drop
+        # the metadata depending on argument order.
+        if not isinstance(winner.get("traits"), dict):
+            winner.pop("traits", None)
+            donors = [e["traits"] for e in candidates
+                      if isinstance(e.get("traits"), dict)]
+            if donors:
+                winner["traits"] = copy.deepcopy(min(donors, key=_canon))
+        out[k] = winner
 
     meta: dict[str, Any] = {"generation": gen}
     if quarantine:

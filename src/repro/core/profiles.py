@@ -142,3 +142,33 @@ def by_name(name: str) -> DeviceProfile:
         if p.name == name:
             return p
     raise KeyError(name)
+
+
+def scaled_profile(
+    base: DeviceProfile,
+    name: str,
+    *,
+    flops: float = 1.0,
+    bandwidth: float = 1.0,
+    vmem: float = 1.0,
+) -> DeviceProfile:
+    """A synthetic neighbour of ``base`` with scaled roofline terms.
+
+    Scales peak math throughput (via ``mxu_tflops``), HBM bandwidth and
+    VMEM capacity independently while keeping the microarchitectural
+    shape (issue width, overlap, VPU count, clock) fixed — the knob set
+    a device *generation* moves, as opposed to a device *family*.
+    Transfer-plane grids use this to build unseen-but-similar devices
+    around :data:`ALL_PROFILES`.
+    """
+    if flops <= 0 or bandwidth <= 0 or vmem <= 0:
+        raise ValueError(
+            f"scale factors must be > 0, got flops={flops}, "
+            f"bandwidth={bandwidth}, vmem={vmem}")
+    return dataclasses.replace(
+        base,
+        name=name,
+        mxu_tflops=base.mxu_tflops * flops,
+        hbm_gbps=base.hbm_gbps * bandwidth,
+        vmem_kb=max(1, int(round(base.vmem_kb * vmem))),
+    )

@@ -68,6 +68,11 @@ from repro.core.decision import RegenerationPolicy, TuningAccounts
 from repro.core.explorer import SearchStrategy
 from repro.core.gate import GATE_MODES, VariantGate
 from repro.core.persistence import TunedRegistry, device_fingerprint
+from repro.core.transfer import (
+    calibrated_traits,
+    device_traits,
+    transfer_seeds,
+)
 from repro.runtime.lifecycle import (
     TunerLifecycle,
     TunerState,
@@ -108,6 +113,11 @@ class ManagedTuner:
     # fleet sync cursor: how much of the explorer history has already
     # been published to the registry's evaluation ledger
     evals_flushed: int = 0
+    # transfer plane: the trait vector persisted with this tuner's bests
+    # (None when the device cannot describe itself), and the space keys
+    # of foreign bests injected as transfer seeds at registration
+    device_traits: dict[str, float] | None = None
+    transfer_seed_keys: tuple = ()
 
     def __call__(self, *args: Any) -> Any:
         t0 = self.last_used_s = self.clock()
@@ -127,6 +137,7 @@ class ManagedTuner:
         out["warm_started"] = self.warm_started
         out["state"] = self.state.value
         out["plane_managed"] = self.plane_managed
+        out["transfer_seeds"] = len(self.transfer_seed_keys)
         return out
 
 
@@ -162,6 +173,9 @@ class TuningCoordinator:
         replica_count: int = 1,
         registry_backend: Any | None = None,
         sync_every_s: float | None = 1.0,
+        transfer: bool = False,
+        transfer_top_k: int = 3,
+        min_similarity: float = 0.75,
     ) -> None:
         if gate_mode not in GATE_MODES:
             raise ValueError(
@@ -253,6 +267,20 @@ class TuningCoordinator:
         self.registry_backend = registry_backend
         self.sync_every_s = sync_every_s
         self.fleet_syncs = 0
+        # Transfer plane: on a fingerprint miss, seed the search with the
+        # top-k foreign bests whose device traits are within the
+        # similarity floor. Seeds enter via inject_candidate — CANDIDATE
+        # through gate/canary, never a blind incumbent.
+        self.transfer = bool(transfer)
+        self.transfer_top_k = int(transfer_top_k)
+        if self.transfer_top_k < 1:
+            raise ValueError(
+                f"transfer_top_k must be >= 1, got {transfer_top_k}")
+        self.min_similarity = float(min_similarity)
+        if not 0.0 < self.min_similarity <= 1.0:
+            raise ValueError(
+                f"min_similarity must be in (0, 1], got {min_similarity}")
+        self.transfer_hits = 0
         self._last_sync_s: float | None = None
         self._managed: list[ManagedTuner] = []
         self._by_key: dict[tuple[str, str], ManagedTuner] = {}
@@ -385,6 +413,32 @@ class TuningCoordinator:
                             and compilette.space.key(p) == warm_key):
                         continue
                     tuner.explorer.mark_seen(p)
+            # Device traits: what this device IS, persisted with every
+            # best so dissimilar-fingerprint peers can rank it. Virtual
+            # backends derive them from the exact profile; real ones from
+            # the platform fingerprint refined by a cost-model probe
+            # against the measured reference time.
+            traits = device_traits(compilette, device=self.device)
+            traits = calibrated_traits(
+                traits, compilette, spec, tuner.reference_score_s,
+                device=self.device)
+            # Transfer seeds: on a fingerprint miss, the nearest-
+            # fingerprint lookup proposes the top-k foreign bests. They
+            # jump the proposal queue stripe-exempt (like warm seeds) but
+            # flow through generate/evaluate/gate/canary as CANDIDATEs —
+            # a foreign best is never trusted blind, and one condemned
+            # anywhere in the fleet was already dropped by the lookup or
+            # is refused by the explorer's quarantine here.
+            seed_keys: list = []
+            if self.transfer and warm_point is None and traits is not None:
+                for seed in transfer_seeds(
+                        self.registry, name, spec, reg_device, traits,
+                        top_k=self.transfer_top_k,
+                        min_similarity=self.min_similarity):
+                    if tuner.explorer.inject_candidate(seed.point):
+                        seed_keys.append(
+                            compilette.space.key(seed.point))
+                        self.transfer_hits += 1
             managed = ManagedTuner(
                 name=name,
                 specialization=spec,
@@ -393,6 +447,8 @@ class TuningCoordinator:
                 clock=self.clock,
                 last_used_s=self.clock(),
                 registry_device=reg_device,
+                device_traits=traits.to_dict() if traits else None,
+                transfer_seed_keys=tuple(seed_keys),
             )
             self._managed.append(managed)
             self._by_key[key] = managed
@@ -643,6 +699,7 @@ class TuningCoordinator:
                 m.registry_device or self.device,
                 best, m.tuner.explorer.best_score,
                 strategy=m.tuner.explorer.name,
+                traits=m.device_traits,
             )
 
     def _fold_into_tombstone(self, m: ManagedTuner) -> None:
@@ -893,7 +950,50 @@ class TuningCoordinator:
                             if self.registry_backend is not None else None),
                 "syncs": self.fleet_syncs,
             },
+            **self._transfer_stats(),
             "kernels": self._kernel_stats(),
+        }
+
+    @staticmethod
+    def _regens_to_best(tuner: OnlineAutotuner) -> int | None:
+        """1-based history index where the final best score first landed."""
+        ex = tuner.explorer
+        if ex.best_point is None:
+            return None
+        for i, (_, score) in enumerate(ex.history, 1):
+            if score <= ex.best_score:
+                return i
+        return None
+
+    def _transfer_stats(self) -> dict[str, Any]:
+        """Transfer-plane counters: hits, adoptions, time-to-best.
+
+        ``transfer_hits`` counts seeds injected; ``transfer_adopted``
+        counts live tuners whose CURRENT best is one of their own
+        transfer seeds (it survived gate/canary and won); and
+        ``seeded_regens_to_best`` is the mean regenerations a
+        transfer-seeded tuner needed to reach its best — the fig-5-at-
+        fleet-scale claim is that this stays ~1 while cold search pays
+        the whole enumeration.
+        """
+        adopted = 0
+        regens: list[int] = []
+        for m in self._managed:
+            if not m.transfer_seed_keys:
+                continue
+            space = m.tuner.compilette.space
+            best = m.tuner.explorer.best_point
+            if best is not None and space.key(best) in m.transfer_seed_keys:
+                adopted += 1
+            r = self._regens_to_best(m.tuner)
+            if r is not None:
+                regens.append(r)
+        return {
+            "transfer_enabled": self.transfer,
+            "transfer_hits": self.transfer_hits,
+            "transfer_adopted": adopted,
+            "seeded_regens_to_best": (
+                sum(regens) / len(regens) if regens else None),
         }
 
     def _kernel_stats(self) -> dict[str, dict[str, Any]]:

@@ -35,12 +35,13 @@ from repro.runtime.coordinator import TuningCoordinator
 DEV = "test:v"
 
 
-def snap(*, best=None, quarantine=None, evaluations=None, generation=0):
+def snap(*, best=None, quarantine=None, evaluations=None, generation=0,
+         traits=None):
     """Build a registry snapshot literal for one key ``k``."""
     reg = TunedRegistry()
     if best is not None:
         point, score = best
-        reg.put("k", {}, DEV, point, score)
+        reg.put("k", {}, DEV, point, score, traits=traits)
     if quarantine:
         for point, reason in quarantine:
             reg.quarantine("k", {}, DEV, point, reason)
@@ -107,6 +108,45 @@ def test_merge_generation_is_max():
     a = snap(generation=3)
     b = snap(generation=7)
     assert merge_snapshots(a, b)["__registry_meta__"]["generation"] == 7
+
+
+TRAITS = {"flops": 1.52e13, "bandwidth_gbps": 410.0, "vmem_kb": 1024.0,
+          "issue": 3.0, "overlap": 0.0}
+
+
+def test_merge_traits_union_is_commutative_and_idempotent():
+    """A side that has not yet learned its device traits must not strip
+    them from the merge — regardless of sync order or repetition."""
+    a = snap(best=({"unroll": 8}, 0.00125))                  # no traits
+    b = snap(best=({"unroll": 8}, 0.00125), traits=TRAITS)   # with traits
+    ab, ba = merge_snapshots(a, b), merge_snapshots(b, a)
+    assert ab == ba
+    (key,) = [k for k in ab if not k.startswith("__")]
+    assert ab[key]["traits"] == TRAITS
+    # idempotent: re-merging either original side changes nothing
+    assert merge_snapshots(ab, a) == ab
+    assert merge_snapshots(ab, b) == ab
+
+
+def test_merge_traits_survive_winner_without_them():
+    """Traits describe the key's DEVICE, not the point: a traits-less
+    winner adopts the losing candidate's trait vector."""
+    a = snap(best=({"unroll": 8}, 0.00125))                  # wins on score
+    b = snap(best=({"unroll": 2}, 0.005), traits=TRAITS)     # loses, knows
+    for merged in (merge_snapshots(a, b), merge_snapshots(b, a)):
+        (key,) = [k for k in merged if not k.startswith("__")]
+        assert merged[key]["point"] == {"unroll": 8}
+        assert merged[key]["score_s"] == 0.00125
+        assert merged[key]["traits"] == TRAITS
+
+
+def test_merge_snapshot_instance_grafts_missing_traits():
+    reg = TunedRegistry()
+    reg.put("k", {}, DEV, {"unroll": 8}, 0.00125)            # no traits yet
+    reg.merge_snapshot(snap(best=({"unroll": 8}, 0.00125), traits=TRAITS))
+    snapshot = reg.snapshot()
+    (key,) = [k for k in snapshot if not k.startswith("__")]
+    assert snapshot[key]["traits"] == TRAITS
 
 
 def test_registry_merge_snapshot_round_trips_through_save_load(tmp_path):

@@ -694,3 +694,80 @@ def test_fleet_quarantine_blocks_warm_start_after_restart():
     assert all(life.point != lie or life.calls == 0
                for life in m_b.tuner._lives)
     assert m_b.tuner.stats()["rollbacks"] == 0
+
+
+# ---------------------------------------------------------- transfer gate
+def test_transfer_seed_faulted_oracle_quarantines_fleet_wide():
+    """Transfer fault row: a trait-similar device receives a foreign best
+    as a transfer seed, its (fault-injected) oracle rejects it — the
+    point must quarantine fleet-wide and never be re-seeded on ANY
+    similar device, which must still converge to an honest best."""
+    from repro.bench.replay import fault_injection_hook
+    from repro.core.profiles import TI_L3, scaled_profile
+
+    def comp_on(clock, profile):
+        comp = make_virtual_compilette(clock, "k",
+                                       lambda p: 0.010 / p["unroll"])
+        comp.virtual = (clock, profile)
+        return comp
+
+    def coordinator(clock, device):
+        return TuningCoordinator(
+            device=device, clock=clock, registry=reg, transfer=True,
+            gate_mode="check",
+            policy=RegenerationPolicy(max_overhead_frac=1.0,
+                                      invest_frac=1.0))
+
+    def drive(coord, m, clock, n=300):
+        for i in range(n):
+            m(i)
+            clock.advance(0.010)
+            coord.observe_busy(0.010)
+            coord.pump()
+
+    reg = TunedRegistry()
+    # donor: clean device publishes its best (with traits)
+    clock_a = VirtualClock()
+    coord_a = coordinator(clock_a, "bench:donor")
+    m_a = coord_a.register("k", comp_on(clock_a, TI_L3),
+                           VirtualClockEvaluator(clock_a),
+                           reference_fn=virtual_kernel(clock_a, 0.010))
+    drive(coord_a, m_a, clock_a)
+    best = {"unroll": 8}
+    assert m_a.tuner.explorer.best_point == best
+
+    # device B (similar profile): EVERY non-base variant is miscompiled —
+    # the transferred best must fail B's oracle, not serve, and condemn
+    clock_b = VirtualClock()
+    coord_b = coordinator(clock_b, "bench:b")
+    comp_b = comp_on(clock_b, scaled_profile(TI_L3, "TI-L3~", flops=1.2))
+    fault_injection_hook({"wrong_output_rate": 1.0}, seed=0,
+                         clock=clock_b)(comp_b)
+    m_b = coord_b.register("k", comp_b, VirtualClockEvaluator(clock_b),
+                           reference_fn=virtual_kernel(clock_b, 0.010))
+    assert m_b.transfer_seed_keys, "similar device must receive the seed"
+    drive(coord_b, m_b, clock_b)
+    s_b = m_b.tuner.stats()
+    assert s_b["gate_failures"] >= 1
+    assert m_b.tuner.explorer.is_quarantined(best)
+    assert reg.is_quarantined("k", {}, "bench:b", best)
+    assert all(life.point != best or life.calls == 0
+               for life in m_b.tuner._lives), (
+        "a faulted transfer seed must never serve a production call")
+    assert coord_b.stats()["transfer_adopted"] == 0
+
+    # device C (similar to both): the condemned point never travels again
+    clock_c = VirtualClock()
+    coord_c = coordinator(clock_c, "bench:c")
+    comp_c = comp_on(clock_c, scaled_profile(TI_L3, "TI-L3≈",
+                                             bandwidth=1.1))
+    m_c = coord_c.register("k", comp_c, VirtualClockEvaluator(clock_c),
+                           reference_fn=virtual_kernel(clock_c, 0.010))
+    bad_key = comp_c.space.key(best)
+    assert bad_key not in m_c.transfer_seed_keys, (
+        "a seed condemned anywhere in the fleet must not be re-seeded "
+        "on any similar device")
+    drive(coord_c, m_c, clock_c)
+    # C still converges honestly (its own gate is clean)
+    assert m_c.tuner.explorer.best_point == best
+    assert m_c.tuner.stats()["gate_failures"] == 0

@@ -57,11 +57,15 @@ def make_compilette(clock, space=None):
 
 # ------------------------------------------------------------ registry
 def test_registry_contents():
-    assert {"two_phase", "random", "greedy"} <= set(ALL_STRATEGIES)
+    assert {"two_phase", "random", "greedy",
+            "cost_model"} <= set(ALL_STRATEGIES)
     assert make_strategy("two_phase", small_space()).name == "two_phase"
     assert isinstance(make_strategy("random", small_space()), RandomSearch)
     assert isinstance(make_strategy("greedy", small_space()),
                       GreedyNeighborhood)
+    from repro.core import CostModelSearch
+    assert isinstance(make_strategy("cost_model", small_space()),
+                      CostModelSearch)
 
 
 def test_unknown_strategy_is_a_value_error():
@@ -423,6 +427,98 @@ def test_random_search_is_deterministic_per_seed():
         RandomSearch(sp, rng_seed=8).next_point, None)]
     assert order_a == order_b
     assert sorted(order_a) == sorted(order_c)
+
+
+def test_cost_model_proposes_in_predicted_order():
+    """With a trustworthy model the predicted-fastest point comes first;
+    with none, enumeration order is served (still exhaustive)."""
+    sp = small_space()
+    strat = make_strategy("cost_model", sp, cost_fn=cost)
+    assert strat.next_point() == {"unroll": 8, "sched": 1}
+    # model-free: plain enumeration, same coverage
+    bare = make_strategy("cost_model", sp)
+    order = [sp.key(p) for p in iter(bare.next_point, None)]
+    assert len(order) == len(set(order)) == len(list(sp.iter_valid()))
+
+
+def test_cost_model_survives_a_misleading_model():
+    """A model that inverts reality must only cost ORDER, not coverage or
+    the final verdict: measurements, not predictions, pick the best."""
+    sp = small_space()
+    strat = make_strategy("cost_model", sp, cost_fn=lambda p: -cost(p))
+    best, score = strat.run_to_completion(cost)
+    assert best == {"unroll": 8, "sched": 1}
+    assert score == cost(best)
+
+
+def test_cost_model_calibrates_ranking_from_observations():
+    """Observed scores correct a biased model: after reports showing the
+    model is wrong about ``sched``, later proposals re-rank."""
+    sp = small_space()
+    # model claims sched is free and unroll barely matters
+    strat = make_strategy("cost_model", sp,
+                          cost_fn=lambda p: 0.001 / p["unroll"])
+    seen = []
+    for _ in range(len(list(sp.iter_valid()))):
+        p = strat.next_point()
+        seen.append(dict(p))
+        strat.report(p, cost(p))
+    assert strat.next_point() is None and strat.finished
+    assert strat.best_point == {"unroll": 8, "sched": 1}
+
+
+def test_cost_model_autotuner_wires_compilette_model_as_cost_fn():
+    """OnlineAutotuner(strategy="cost_model") feeds the compilette's own
+    analytic cost model into the strategy: the first non-base proposal is
+    the model's argmin, not enumeration order."""
+    clock = VirtualClock()
+    sp = small_space()
+
+    def gen(point, **spec):
+        return virtual_kernel(clock, cost(point))
+
+    comp = Compilette("k", sp, gen,
+                      cost_model=lambda point, spec, profile: cost(point))
+    tuner = OnlineAutotuner(comp, VirtualClockEvaluator(clock),
+                            clock=clock, wake_every=1,
+                            strategy="cost_model")
+    assert tuner.explorer.peek(1)[0] == {"unroll": 8, "sched": 1}
+    # a model-less compilette degrades to the model-free strategy
+    tuner2 = OnlineAutotuner(Compilette("k2", small_space(), gen),
+                             VirtualClockEvaluator(clock),
+                             clock=clock, wake_every=1,
+                             strategy="cost_model")
+    assert tuner2.explorer.peek(1)[0] is not None
+
+
+def test_cost_model_seeded_determinism_with_model_and_seeds():
+    """Satellite row: same seed points + same cost_fn + same peek(n)
+    interleaving => byte-identical proposal/peek/best logs."""
+    sp = small_space()
+
+    def run():
+        strat = make_strategy(
+            "cost_model", sp,
+            seed_points=[{"unroll": 4, "sched": 0}],
+            cost_fn=lambda p: 0.008 / p["unroll"])
+        log = []
+        while True:
+            log.append(("peek", [sp.key(p) for p in strat.peek(2)]))
+            p = strat.next_point()
+            if p is None:
+                break
+            strat.report(p, cost(p))
+            log.append(("propose", sp.key(p)))
+        log.append(("best", sp.key(strat.best_point), strat.best_score))
+        return log
+
+    a, b = run(), run()
+    assert a == b
+    # the warm seed is proposed first, then model-ranked order
+    proposes = [e for e in a if e[0] == "propose"]
+    assert proposes[0][1] == sp.key({"unroll": 4, "sched": 0})
+    assert a[-1] == ("best", sp.key({"unroll": 8, "sched": 1}),
+                     cost({"unroll": 8, "sched": 1}))
 
 
 def test_greedy_recenters_on_improvement():
